@@ -1,0 +1,32 @@
+"""Shared benchmark utilities."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Tuple
+
+from repro.core import MiningConfig
+
+#: mining budget used by all paper-figure benchmarks (keeps the full suite
+#: under ~10 min on one CPU core; raise for deeper results)
+BENCH_MINING = MiningConfig(min_support=4, max_pattern_nodes=8,
+                            time_budget_s=45, max_patterns_per_level=60)
+
+FAST_MINING = MiningConfig(min_support=3, max_pattern_nodes=6,
+                           time_budget_s=15, max_patterns_per_level=40)
+
+
+def timeit(fn: Callable, *args, repeats: int = 3, **kw) -> Tuple[float, object]:
+    """(best microseconds per call, last result)."""
+    best = float("inf")
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        dt = (time.perf_counter() - t0) * 1e6
+        best = min(best, dt)
+    return best, out
+
+
+def emit(name: str, us: float, derived: str) -> None:
+    print(f"{name},{us:.1f},{derived}")

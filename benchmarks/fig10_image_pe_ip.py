@@ -1,0 +1,45 @@
+"""Paper Fig. 10: normalized PE energy and total area for all four image
+apps on PE IP (specialized for the whole image domain) vs PE Spec
+(per-app) vs the baseline PE."""
+
+from __future__ import annotations
+
+from repro.apps import image_graphs
+from repro.core import (baseline_datapath, domain_pe, evaluate_mapping,
+                        map_application, specialize_per_app)
+
+from .common import BENCH_MINING, emit, timeit
+
+
+def run() -> dict:
+    apps = image_graphs()
+    base = baseline_datapath()
+    base_costs = {n: evaluate_mapping(base, map_application(base, g, n),
+                                      "baseline") for n, g in apps.items()}
+
+    us_ip, ip = timeit(lambda: domain_pe(apps, BENCH_MINING,
+                                         per_app_subgraphs=2,
+                                         domain_name="PE_IP"), repeats=1)
+    us_sp, per_app = timeit(lambda: specialize_per_app(apps, BENCH_MINING,
+                                                       max_merge=3),
+                            repeats=1)
+
+    out = {}
+    for name in sorted(apps):
+        c_base = base_costs[name]
+        c_ip = ip.variants[0].costs[name]
+        c_sp = per_app[name].best_variant(name).costs[name]
+        e_ip = c_ip.energy_per_op_pj / c_base.energy_per_op_pj
+        a_ip = c_ip.total_area_um2 / c_base.total_area_um2
+        e_sp = c_sp.energy_per_op_pj / c_base.energy_per_op_pj
+        a_sp = c_sp.total_area_um2 / c_base.total_area_um2
+        emit(f"fig10_{name}", us_ip + us_sp,
+             f"PE_IP:e={e_ip:.3f},a={a_ip:.3f};"
+             f"PE_Spec:e={e_sp:.3f},a={a_sp:.3f} (normalized to baseline; "
+             f"paper: IP 29.6-32.5% area, 44.5-65.25% energy savings)")
+        out[name] = {"ip": (e_ip, a_ip), "spec": (e_sp, a_sp)}
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,44 @@
+"""Paper Fig. 11: normalized energy and area for ML kernels (Conv, Block,
+StrC, DS) on PE ML (domain) vs PE Spec (per-kernel) vs baseline."""
+
+from __future__ import annotations
+
+from repro.apps import ml_graphs
+from repro.core import (baseline_datapath, domain_pe, evaluate_mapping,
+                        map_application, specialize_per_app)
+
+from .common import BENCH_MINING, emit, timeit
+
+
+def run() -> dict:
+    apps = ml_graphs()
+    base = baseline_datapath()
+    base_costs = {n: evaluate_mapping(base, map_application(base, g, n),
+                                      "baseline") for n, g in apps.items()}
+    us_ml, ml = timeit(lambda: domain_pe(apps, BENCH_MINING,
+                                         per_app_subgraphs=2,
+                                         domain_name="PE_ML"), repeats=1)
+    us_sp, per_app = timeit(lambda: specialize_per_app(apps, BENCH_MINING,
+                                                       max_merge=3),
+                            repeats=1)
+    out = {}
+    worst_saving = 1.0
+    for name in sorted(apps):
+        c_base = base_costs[name]
+        c_ml = ml.variants[0].costs[name]
+        c_sp = per_app[name].best_variant(name).costs[name]
+        e_ml = c_ml.energy_per_op_pj / c_base.energy_per_op_pj
+        a_ml = c_ml.total_area_um2 / c_base.total_area_um2
+        e_sp = c_sp.energy_per_op_pj / c_base.energy_per_op_pj
+        worst_saving = min(worst_saving, e_ml)
+        emit(f"fig11_{name}", us_ml + us_sp,
+             f"PE_ML:e={e_ml:.3f},a={a_ml:.3f};PE_Spec:e={e_sp:.3f} "
+             f"(paper: PE ML up to 60.15% lower energy)")
+        out[name] = {"ml": (e_ml, a_ml), "spec": e_sp}
+    emit("fig11_best_ml_energy_saving", us_ml,
+         f"{(1-worst_saving)*100:.1f}% (paper: up to 60.15%)")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,44 @@
+"""Paper Fig. 8: energy/op and total active-PE area as the PE is
+increasingly specialized for camera pipeline (baseline, PE1..PE5)."""
+
+from __future__ import annotations
+
+from repro.apps import image
+from repro.core import (baseline_datapath, evaluate_mapping, map_application,
+                        specialize_per_app)
+
+from .common import BENCH_MINING, emit, timeit
+
+
+def run() -> dict:
+    g = image.build_graph("camera")
+    base = baseline_datapath()
+    c0 = evaluate_mapping(base, map_application(base, g, "camera"),
+                          "baseline")
+
+    us, res = timeit(
+        lambda: specialize_per_app({"camera": g}, BENCH_MINING,
+                                   max_merge=4)["camera"], repeats=1)
+    rows = {"baseline": c0}
+    for v in res.variants:
+        rows[v.name] = v.costs["camera"]
+
+    best = res.best_variant("camera").costs["camera"]
+    e_ratio = c0.energy_per_op_pj / best.energy_per_op_pj
+    a_ratio = c0.total_area_um2 / best.total_area_um2
+    cg_ratio = c0.cgra_energy_per_op_pj / best.cgra_energy_per_op_pj
+    for name, c in rows.items():
+        emit(f"fig8_{name}", us,
+             f"e/op={c.energy_per_op_pj:.4f}pJ"
+             f";area={c.total_area_um2/1e3:.1f}kum2"
+             f";cgra_e/op={c.cgra_energy_per_op_pj:.4f}pJ"
+             f";fmax={c.fmax_ghz:.2f}GHz;ops/pe={c.ops_per_pe:.2f}")
+    emit("fig8_ratio_vs_baseline", us,
+         f"energy_x={e_ratio:.2f};area_x={a_ratio:.2f};"
+         f"cgra_energy_x={cg_ratio:.2f} (paper: 8.3x energy, 3.4x area)")
+    return {"rows": rows, "e_ratio": e_ratio, "a_ratio": a_ratio,
+            "cgra_ratio": cg_ratio}
+
+
+if __name__ == "__main__":
+    run()

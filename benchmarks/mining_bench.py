@@ -1,0 +1,24 @@
+"""DSE-pipeline throughput: mining + merging runtime per application."""
+
+from __future__ import annotations
+
+from repro.apps import image_graphs, ml_graphs
+from repro.core import mine_and_rank
+
+from .common import FAST_MINING, emit, timeit
+
+
+def run() -> dict:
+    out = {}
+    for name, g in {**image_graphs(), **ml_graphs()}.items():
+        us, ranked = timeit(lambda: mine_and_rank(g, FAST_MINING), repeats=1)
+        top = ranked[0] if ranked else None
+        emit(f"mining_{name}", us,
+             f"nodes={g.num_compute_nodes()};patterns={len(ranked)};"
+             f"top_mis={top.mis_size if top else 0}")
+        out[name] = len(ranked)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,30 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (see each module's docstring
+for the paper reference).  Run with ``PYTHONPATH=src python -m benchmarks.run``.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from . import (fig8_camera_specialization, fig10_image_pe_ip,
+                   fig11_ml_pe, kernel_bench, mining_bench,
+                   table1_cgra_vs_asic)
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    mining_bench.run()          # pipeline throughput (Sec. IV)
+    fig8_camera_specialization.run()   # Fig. 8
+    fig10_image_pe_ip.run()     # Fig. 10
+    fig11_ml_pe.run()           # Fig. 11
+    table1_cgra_vs_asic.run()   # Table I
+    kernel_bench.run()          # TPU-adaptation kernel statistics
+    print(f"# total benchmark wall time: {time.time()-t0:.1f}s",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Render EXPERIMENTS.md tables from results/*.jsonl."""
+
+import json
+import sys
+
+
+def load(path):
+    rows = []
+    for line in open(path):
+        rows.append(json.loads(line))
+    return rows
+
+
+def roofline_table(rows, mesh="single"):
+    out = ["| arch | shape | compute (ms) | memory (ms) | collective (ms) | "
+           "dominant | MODEL_FLOPS | useful | roofline | peak mem/dev |",
+           "|---|---|---:|---:|---:|---|---:|---:|---:|---:|"]
+    skips = []
+    for r in rows:
+        if r.get("mesh") != mesh and r.get("status") == "ok":
+            continue
+        if r["status"] == "skipped":
+            if r.get("mesh", "single") == mesh or "mesh" not in r:
+                skips.append(r)
+            continue
+        if r["status"] != "ok":
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']*1e3:.1f} "
+            f"| {r['memory_s']*1e3:.1f} | {r['collective_s']*1e3:.1f} "
+            f"| **{r['dominant']}** | {r['model_flops']:.2e} "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_fraction']:.2f} "
+            f"| {r['peak_memory_bytes']/2**30:.1f} GiB |")
+    return "\n".join(out), skips
+
+
+def dryrun_table(rows):
+    out = ["| arch | shape | mesh | status | compile (s) | collectives "
+           "(count) | collective bytes/dev | notes |",
+           "|---|---|---|---|---:|---:|---:|---|"]
+    for r in rows:
+        if r["status"] == "ok":
+            note = ""
+            cb = f"{r['collective_bytes_per_device']/2**30:.1f} GiB"
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok "
+                       f"| {r.get('t_compile_s', 0):.0f} "
+                       f"| {r.get('collective_count', 0):.0f} | {cb} | {note} |")
+        elif r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"skipped | - | - | - | {r['reason'][:60]}... |")
+        else:
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"ERROR | - | - | - | {r['error'][:60]} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    rows = load(sys.argv[1] if len(sys.argv) > 1 else
+                "results/baseline.jsonl")
+    which = sys.argv[2] if len(sys.argv) > 2 else "roofline"
+    if which == "roofline":
+        table, skips = roofline_table(rows)
+        print(table)
+    else:
+        print(dryrun_table(rows))

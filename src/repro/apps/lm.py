@@ -1,0 +1,74 @@
+"""LM-architecture idiom graphs: the assigned archs as DSE applications.
+
+Each function traces (via jaxpr) the elementwise/compute structure of one
+transformer-layer family at tiny dims; the DSE pipeline mines them exactly
+like the paper's image apps.  Matmuls stay macro nodes (they live on the
+MXU); the mined patterns are the *elementwise idioms* — RMSNorm cores,
+SwiGLU gates, RoPE rotations, softcaps, router chains, SSM updates — i.e.
+the chains the generated fused-PE kernels (kernels/pe_fused.py) remove from
+HBM on TPU.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..graphir.graph import Graph
+from ..graphir.trace import trace_fn
+
+_D, _F, _H, _N = 8, 16, 2, 4
+
+
+def dense_layer(x, wq, wk, wo, wg, wu, wd, ln1, ln2):
+    """llama-family: rmsnorm -> qk rope-ish mix -> swiglu."""
+    h = x * jax.lax.rsqrt(jnp.mean(x * x, -1, keepdims=True) + 1e-6) * ln1
+    q = h @ wq
+    k = h @ wk
+    mix = jnp.tanh(q * 0.5) * k          # stand-in for the attention mix
+    x = x + mix @ wo
+    h2 = x * jax.lax.rsqrt(jnp.mean(x * x, -1, keepdims=True) + 1e-6) * ln2
+    return x + (jax.nn.silu(h2 @ wg) * (h2 @ wu)) @ wd
+
+
+def gemma_layer(x, wq, wk, wo, wg, wu, wd, ln1, ln2):
+    """gemma-family: softcap + geglu."""
+    h = x * jax.lax.rsqrt(jnp.mean(x * x, -1, keepdims=True) + 1e-6) * ln1
+    s = (h @ wq) * (h @ wk).sum(-1, keepdims=True)
+    s = 50.0 * jnp.tanh(s / 50.0)        # attn logit softcap
+    x = x + (s * h) @ wo
+    h2 = x * jax.lax.rsqrt(jnp.mean(x * x, -1, keepdims=True) + 1e-6) * ln2
+    return x + (jax.nn.gelu(h2 @ wg, approximate=True) * (h2 @ wu)) @ wd
+
+
+def moe_router(x, wr):
+    """qwen-family router: softmax -> top-k -> renormalize."""
+    logits = x @ wr
+    p = jax.nn.softmax(logits, axis=-1)
+    v, i = jax.lax.top_k(p, 2)
+    return v / (v.sum(-1, keepdims=True) + 1e-9)
+
+
+def ssm_update(dt, a, b, x, h, c):
+    """mamba-family state update: the per-step chain the Pallas kernel fuses."""
+    da = jnp.exp(jax.nn.softplus(dt)[..., None] * a)
+    h2 = da * h + (dt * x)[..., None] * b[..., None, :]
+    return (h2 * c[..., None, :]).sum(-1) * jax.nn.silu(x)
+
+
+def lm_idiom_graphs() -> Dict[str, Graph]:
+    key = jax.random.PRNGKey(0)
+    w = lambda *s: jnp.ones(s, jnp.float32)
+    return {
+        "lm_dense": trace_fn(dense_layer, w(2, _D), w(_D, _D), w(_D, _D),
+                             w(_D, _D), w(_D, _F), w(_D, _F), w(_F, _D),
+                             w(_D), w(_D)),
+        "lm_gemma": trace_fn(gemma_layer, w(2, _D), w(_D, _D), w(_D, _D),
+                             w(_D, _D), w(_D, _F), w(_D, _F), w(_F, _D),
+                             w(_D), w(_D)),
+        "lm_router": trace_fn(moe_router, w(2, _D), w(_D, 8)),
+        "lm_ssm": trace_fn(ssm_update, w(2, _D), w(_D, _N), w(2, _N),
+                           w(2, _D), w(2, _D, _N), w(2, _N)),
+    }

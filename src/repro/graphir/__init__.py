@@ -1,0 +1,15 @@
+"""Dataflow-graph IR: the CoreIR analogue (see DESIGN.md §2)."""
+
+from .graph import Graph, free_in_ports, pattern_from_spec, sink_nodes
+from .interp import interpret, interpret_pattern, pattern_outputs
+from .ops import OPS, OpInfo, area_of, energy_of, mergeable, merged_unit, unit_of
+from .trace import from_jaxpr, trace_fn
+from .symtrace import Sym, Tracer
+from .symtrace import trace as trace_scalar
+
+__all__ = [
+    "Graph", "free_in_ports", "pattern_from_spec", "sink_nodes",
+    "interpret", "interpret_pattern", "pattern_outputs",
+    "OPS", "OpInfo", "area_of", "energy_of", "mergeable", "merged_unit",
+    "unit_of", "Sym", "Tracer", "trace_scalar", "from_jaxpr", "trace_fn",
+]

@@ -1,0 +1,199 @@
+"""jaxpr -> dataflow-graph front-end (tensor level).
+
+The paper's front-end lowers Halide to CoreIR.  For the LM architectures we
+trace a *single transformer layer* (tiny dims) through ``jax.make_jaxpr`` and
+convert each equation into a graph node at the tensor level.  Elementwise
+primitives map 1:1 onto the PE op vocabulary; matmuls/reductions become
+zero-PE-cost macro nodes (they run on the MXU, not the mined PE datapath);
+structural primitives (reshape/broadcast/convert/...) are elided so mined
+patterns see the *compute* idioms (RMSNorm, SwiGLU, RoPE, softcap, router).
+
+Scalar unrolled graphs (MAC chains a la the paper's Fig. 3) come from the
+:mod:`repro.graphir.symtrace` front-end instead.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+from jax.extend import core as jcore
+
+from .graph import Graph
+
+# primitive name -> op name (1:1 compute primitives)
+PRIM2OP: Dict[str, str] = {
+    "add": "add", "add_any": "add",
+    "sub": "sub",
+    "mul": "mul",
+    "div": "div",
+    "neg": "neg",
+    "abs": "abs",
+    "sign": "sign",
+    "exp": "exp", "exp2": "exp",
+    "log": "log", "log1p": "log",
+    "tanh": "tanh",
+    "logistic": "sigmoid",
+    "rsqrt": "rsqrt",
+    "sqrt": "sqrt",
+    "erf": "erf",
+    "pow": "pow",
+    "max": "max",
+    "min": "min",
+    "and": "and",
+    "or": "or",
+    "xor": "xor",
+    "not": "not",
+    "eq": "eq",
+    "ne": "neq",
+    "lt": "lt",
+    "le": "lte",
+    "gt": "gt",
+    "ge": "gte",
+    "select_n": "sel",
+    "shift_left": "shl",
+    "shift_right_logical": "shr",
+    "shift_right_arithmetic": "ashr",
+    "floor": "floor",
+    "round": "round",
+    "nextafter": "add",
+    "dot_general": "matmul",
+    "reduce_sum": "rsum",
+    "reduce_max": "rmax",
+    "reduce_min": "rmin",
+    "reduce_and": "rmax",
+    "reduce_or": "rmax",
+    "cumsum": "cumsum",
+    "cumlogsumexp": "cumsum",
+    "argmax": "argmax",
+    "argmin": "argmax",
+    "sort": "sort",
+    "top_k": "top_k",
+    "concatenate": "cat",
+    "gather": "gather",
+    "dynamic_update_slice": "scatter",
+    "scatter": "scatter", "scatter-add": "scatter", "scatter_add": "scatter",
+    "iota": "iota",
+    "clamp": "max",  # clamp(lo, x, hi): comparator-unit op
+    "integer_pow": "pow",
+    "square": "mul",
+    "atan2": "pow",
+    "rem": "div",
+    "cos": "exp", "sin": "exp",  # transcendental unit (RoPE tables)
+    "expm1": "exp",
+}
+
+# primitives forwarded to their first operand (no compute)
+PASSTHROUGH = {
+    "broadcast_in_dim", "reshape", "transpose", "squeeze", "expand_dims",
+    "convert_element_type", "stop_gradient", "slice", "dynamic_slice",
+    "rev", "copy", "copy_p", "reduce_precision", "real", "device_put",
+    "pad", "bitcast_convert_type", "optimization_barrier", "split",
+}
+
+# params-carrying call primitives to inline
+_CALL_JAXPR_PARAMS = ("jaxpr", "call_jaxpr", "fun_jaxpr")
+
+
+def from_jaxpr(jaxpr: jcore.Jaxpr, *, graph: Optional[Graph] = None,
+               env: Optional[Dict[Any, int]] = None,
+               strict: bool = False) -> Graph:
+    """Convert an (open) jaxpr into a tensor-level dataflow Graph."""
+    g = graph if graph is not None else Graph()
+    env = env if env is not None else {}
+
+    def read(atom) -> int:
+        if isinstance(atom, jcore.Literal):
+            val = np.asarray(atom.val)
+            scalar = float(val.reshape(-1)[0]) if val.size else 0.0
+            return g.add_node("const", value=scalar)
+        return env[atom]
+
+    def write(var, nid: int) -> None:
+        env[var] = nid
+
+    for var in jaxpr.invars + jaxpr.constvars:
+        if var not in env:
+            name = f"in{len([n for n, op in g.nodes.items() if op == 'input'])}"
+            write(var, g.add_node("input", name=name))
+
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+
+        if prim in ("scan", "while", "cond"):
+            raise NotImplementedError(
+                f"trace single-layer functions without {prim!r}; got {prim}")
+
+        # inline nested jaxprs (jit/pjit, remat, custom_jvp/vjp, closed_call)
+        sub = None
+        for key in _CALL_JAXPR_PARAMS:
+            if key in eqn.params:
+                sub = eqn.params[key]
+                break
+        if sub is not None and hasattr(sub, "eqns") or (
+                sub is not None and hasattr(sub, "jaxpr")):
+            closed = sub
+            inner = closed.jaxpr if hasattr(closed, "jaxpr") else closed
+            consts = getattr(closed, "consts", [])
+            inner_env: Dict[Any, int] = {}
+            for iv, atom in zip(inner.invars, eqn.invars):
+                inner_env[iv] = read(atom)
+            for cv, c in zip(inner.constvars, consts):
+                val = np.asarray(c)
+                scalar = float(val.reshape(-1)[0]) if val.size else 0.0
+                inner_env[cv] = g.add_node("const", value=scalar)
+            from_jaxpr(inner, graph=g, env=inner_env, strict=strict)
+            for ov, inner_ov in zip(eqn.outvars, inner.outvars):
+                write(ov, inner_env[inner_ov]
+                      if not isinstance(inner_ov, jcore.Literal)
+                      else read(inner_ov))
+            continue
+
+        if prim in PASSTHROUGH:
+            src = read(eqn.invars[0])
+            for ov in eqn.outvars:
+                write(ov, src)
+            continue
+
+        op = PRIM2OP.get(prim)
+        if op is None:
+            if strict:
+                raise NotImplementedError(f"unmapped primitive {prim!r}")
+            op = "opaque"
+        nid = g.add_node(op, prim=prim)
+        for port, iv in enumerate(eqn.invars):
+            g.add_edge(read(iv), nid, port)
+        for ov in eqn.outvars:
+            write(ov, nid)
+
+    if graph is None:
+        for ov in jaxpr.outvars:
+            nid = read(ov)
+            out = g.add_node("output")
+            g.add_edge(nid, out, 0)
+            g.mark_output(nid)
+    return g
+
+
+def trace_fn(fn: Callable, *example_args, strict: bool = False) -> Graph:
+    """Trace a JAX function on example args into a dataflow Graph."""
+    closed = jax.make_jaxpr(fn)(*example_args)
+    g = Graph()
+    env: Dict[Any, int] = {}
+    for cv, c in zip(closed.jaxpr.constvars, closed.consts):
+        val = np.asarray(c)
+        scalar = float(val.reshape(-1)[0]) if val.size else 0.0
+        env[cv] = g.add_node("const", value=scalar)
+    for iv in closed.jaxpr.invars:
+        name = f"in{len([n for n, op in g.nodes.items() if op == 'input'])}"
+        env[iv] = g.add_node("input", name=name)
+    from_jaxpr(closed.jaxpr, graph=g, env=env, strict=strict)
+    for ov in closed.jaxpr.outvars:
+        if isinstance(ov, jcore.Literal):
+            continue
+        nid = env[ov]
+        out = g.add_node("output")
+        g.add_edge(nid, out, 0)
+        g.mark_output(nid)
+    return g

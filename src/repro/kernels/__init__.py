@@ -1,0 +1,9 @@
+"""Pallas TPU kernels: generated fused PEs (the paper technique), flash
+attention, selective scan, MXU matmul with PE epilogues.  Validated against
+ref.py oracles in interpret mode (this host is CPU-only)."""
+
+from .ops import attention, fused_pe_apply, matmul_fused, selective_scan
+from .pe_fused import kernel_from_config, make_pe_kernel
+
+__all__ = ["attention", "fused_pe_apply", "matmul_fused", "selective_scan",
+           "kernel_from_config", "make_pe_kernel"]

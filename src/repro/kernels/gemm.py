@@ -1,0 +1,123 @@
+"""MXU-tiled matmul with a fused PE-graph epilogue.
+
+The ML-domain PEs the paper derives (Fig. 12) are MAC datapaths followed by
+small op chains (bias add, ReLU, requantize, residual add).  On TPU the MAC
+array is the MXU; the mined epilogue graph fuses into the matmul's output
+tile while the accumulator is still in VMEM — this kernel is the bridge
+between the DSE output and the MXU.
+
+Grid (M/bm, N/bn, K/bk) with K innermost; accumulation in an f32 VMEM
+scratch; on the last K step the epilogue DAG (a repro.graphir pattern whose
+first free port is the accumulator) is evaluated on the tile and written
+out.  Extra epilogue operands are (N,)-vectors (bias-like, tiled by bn) or
+(M, N) matrices (residual-like, tiled by (bm, bn)).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..graphir.graph import Graph, free_in_ports, sink_nodes
+from ..graphir.ops import OPS
+from .pe_fused import _JNP_SEMANTICS
+
+
+def _eval_epilogue(pattern: Graph, acc, extras: Sequence[jax.Array]):
+    free = free_in_ports(pattern)
+    port_vals = {free[0]: acc}
+    for fp, x in zip(free[1:], extras):
+        port_vals[fp] = x
+    vals = {}
+    for node in pattern.topo_order():
+        op = pattern.nodes[node]
+        if op == "const":
+            vals[node] = jnp.float32(pattern.attr(node, "value", 0.0))
+            continue
+        ins = pattern.in_edges(node)
+        args = []
+        for p in range(OPS[op].arity):
+            args.append(vals[ins[p]] if p in ins else port_vals[(node, p)])
+        vals[node] = _JNP_SEMANTICS[op](*args)
+    return vals[sink_nodes(pattern)[0]]
+
+
+def _gemm_kernel(*refs, pattern: Optional[Graph], n_extra: int,
+                 extra_kinds: Tuple[str, ...], nsteps: int):
+    x_ref, w_ref = refs[0], refs[1]
+    extra_refs = refs[2:2 + n_extra]
+    o_ref = refs[2 + n_extra]
+    acc_scr = refs[3 + n_extra]
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _zero():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    acc_scr[...] += jnp.dot(x_ref[...].astype(jnp.float32),
+                            w_ref[...].astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(ki == nsteps - 1)
+    def _emit():
+        acc = acc_scr[...]
+        if pattern is not None:
+            extras = []
+            for ref, kind in zip(extra_refs, extra_kinds):
+                v = ref[...].astype(jnp.float32)
+                if kind == "vec":
+                    v = v[None, :]                     # broadcast over rows
+                extras.append(v)
+            acc = _eval_epilogue(pattern, acc, extras)
+        o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def gemm_pe(x: jax.Array, w: jax.Array,
+            *extras: jax.Array,
+            epilogue: Optional[Graph] = None,
+            extra_kinds: Tuple[str, ...] = (),
+            bm: int = 128, bn: int = 128, bk: int = 128,
+            out_dtype=None,
+            interpret: bool = False) -> jax.Array:
+    """x (M, K) @ w (K, N) with fused epilogue.  Shapes must be multiples of
+    the block sizes (ops.py pads)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    if epilogue is not None:
+        need = len(free_in_ports(epilogue)) - 1
+        assert len(extras) == need, (len(extras), need)
+        assert len(extra_kinds) == need
+    nsteps = k // bk
+    grid = (m // bm, n // bn, nsteps)
+
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+        pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+    ]
+    for kind in extra_kinds:
+        if kind == "vec":
+            in_specs.append(pl.BlockSpec((bn,), lambda i, j, s: (j,)))
+        else:
+            in_specs.append(pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)))
+
+    kernel = functools.partial(
+        _gemm_kernel, pattern=epilogue, n_extra=len(extras),
+        extra_kinds=extra_kinds, nsteps=nsteps)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype or x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w, *extras)

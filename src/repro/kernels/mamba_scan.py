@@ -1,0 +1,73 @@
+"""Chunked selective-scan Pallas kernel (Mamba-1 inner recurrence).
+
+Computes  h_t = a_t * h_{t-1} + bx_t ;  y_t = <h_t, c_t> + skip_t
+with diagonal a (the discretized state matrix).  The grid is
+(B, D/bd, S/bs) with the *sequence axis innermost* — TPU grids execute
+sequentially on a core, so the running state h lives in a VMEM scratch that
+persists across sequence blocks (initialized at block 0).  HBM traffic is
+exactly one read of a/bx/c and one write of y; the (S, D, N) state tensor
+that a naive associative scan materializes never exists.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(a_ref, bx_ref, c_ref, y_ref, h_scr, *, bs: int, bd: int,
+                 n: int):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    a = a_ref[0].astype(jnp.float32)       # (bs, bd, N)
+    bx = bx_ref[0].astype(jnp.float32)     # (bs, bd, N)
+    c = c_ref[0].astype(jnp.float32)       # (bs, N)
+
+    def step(t, carry):
+        h, y = carry
+        h = a[t] * h + bx[t]               # (bd, N)
+        yt = jnp.sum(h * c[t][None, :], axis=-1)   # (bd,)
+        y = y.at[t].set(yt)
+        return h, y
+
+    h0 = h_scr[...]
+    y0 = jnp.zeros((bs, bd), jnp.float32)
+    h, y = lax.fori_loop(0, bs, step, (h0, y0))
+    h_scr[...] = h
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+def mamba_scan(a: jax.Array, bx: jax.Array, c: jax.Array, *,
+               bs: int = 128, bd: int = 128,
+               interpret: bool = False) -> jax.Array:
+    """a, bx: (B, S, D, N); c: (B, S, N).  Returns y (B, S, D) f32 where
+    y[b,t,d] = sum_n h[b,t,d,n] * c[b,t,n] under the recurrence above."""
+    b, s, d, n = a.shape
+    bs = min(bs, s)
+    bd = min(bd, d)
+    assert s % bs == 0 and d % bd == 0, (s, d, bs, bd)
+    grid = (b, d // bd, s // bs)
+    kernel = functools.partial(_scan_kernel, bs=bs, bd=bd, n=n)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bs, bd, n), lambda b_, di, si: (b_, si, di, 0)),
+            pl.BlockSpec((1, bs, bd, n), lambda b_, di, si: (b_, si, di, 0)),
+            pl.BlockSpec((1, bs, n), lambda b_, di, si: (b_, si, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bs, bd), lambda b_, di, si: (b_, si, di)),
+        out_shape=jax.ShapeDtypeStruct((b, s, d), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bd, n), jnp.float32)],
+        interpret=interpret,
+    )(a, bx, c)

@@ -1,0 +1,165 @@
+"""Generated fused-PE Pallas kernel — the paper's technique on TPU.
+
+A CGRA PE specialized for a mined subgraph executes the whole multi-op
+dataflow graph in one configured datapath pass.  The TPU analogue
+(DESIGN.md §2): given the same subgraph (an elementwise/mac op-DAG from
+repro.core mining+merging), *generate* a Pallas kernel whose body evaluates
+the DAG on VPU registers over one VMEM tile — each application of the PE
+touches HBM once per operand tile instead of once per primitive op.  Mux
+configuration happens at trace time (each config compiles its own body), so
+the datapath specialization is free on TPU.
+
+``make_pe_kernel(pattern)`` returns a jitted function
+``f(*inputs) -> tuple(outputs)`` with one input per free in-port of the
+pattern (tile-blocked, any 2D shape padded to the block) and one output per
+pattern sink.  Constants are baked into the kernel body.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..graphir.graph import Graph, free_in_ports, sink_nodes
+from ..graphir.ops import OPS
+
+# jnp semantics for kernel bodies (VPU ops on tiles)
+_JNP_SEMANTICS: Dict[str, Callable] = {
+    "add": lambda a, b: a + b,
+    "sub": lambda a, b: a - b,
+    "neg": lambda a: -a,
+    "abs": lambda a: jnp.abs(a),
+    "mul": lambda a, b: a * b,
+    "mac": lambda a, b, c: a * b + c,
+    "div": lambda a, b: a / b,
+    "recip": lambda a: 1.0 / a,
+    "shl": lambda a, b: a * jnp.exp2(b),
+    "shr": lambda a, b: a * jnp.exp2(-b),
+    "ashr": lambda a, b: a * jnp.exp2(-b),
+    "eq": lambda a, b: (a == b),
+    "neq": lambda a, b: (a != b),
+    "lt": lambda a, b: (a < b),
+    "lte": lambda a, b: (a <= b),
+    "gt": lambda a, b: (a > b),
+    "gte": lambda a, b: (a >= b),
+    "min": lambda a, b: jnp.minimum(a, b),
+    "max": lambda a, b: jnp.maximum(a, b),
+    "and": lambda a, b: jnp.logical_and(a, b),
+    "or": lambda a, b: jnp.logical_or(a, b),
+    "xor": lambda a, b: jnp.logical_xor(a, b),
+    "not": lambda a: jnp.logical_not(a),
+    "sign": lambda a: jnp.sign(a),
+    "sel": lambda c, f, t: jnp.where(c, t, f),
+    "exp": lambda a: jnp.exp(a),
+    "log": lambda a: jnp.log(a),
+    "tanh": lambda a: jnp.tanh(a),
+    "sigmoid": lambda a: jax.nn.sigmoid(a),
+    "rsqrt": lambda a: jax.lax.rsqrt(a),
+    "sqrt": lambda a: jnp.sqrt(a),
+    "erf": lambda a: jax.lax.erf(a),
+    "pow": lambda a, b: jnp.power(a, b),
+    "floor": lambda a: jnp.floor(a),
+    "round": lambda a: jnp.round(a),
+}
+
+
+def pe_kernel_body(pattern: Graph, n_in: int, sinks: List[int],
+                   free: List[Tuple[int, int]]):
+    """Build the Pallas kernel body evaluating the pattern DAG on one tile."""
+    topo = pattern.topo_order()
+
+    def kernel(*refs):
+        in_refs = refs[:n_in]
+        out_refs = refs[n_in:]
+        port_vals = {fp: in_refs[i][...] for i, fp in enumerate(free)}
+        vals: Dict[int, jax.Array] = {}
+        for n in topo:
+            op = pattern.nodes[n]
+            if op == "const":
+                vals[n] = jnp.float32(pattern.attr(n, "value", 0.0))
+                continue
+            ins = pattern.in_edges(n)
+            args = []
+            for p in range(OPS[op].arity):
+                if p in ins:
+                    args.append(vals[ins[p]])
+                else:
+                    args.append(port_vals[(n, p)])
+            vals[n] = _JNP_SEMANTICS[op](*args)
+        for i, s in enumerate(sinks):
+            v = vals[s]
+            out_refs[i][...] = v.astype(out_refs[i].dtype)
+
+    return kernel
+
+
+def make_pe_kernel(pattern: Graph, *,
+                   block: Tuple[int, int] = (256, 256),
+                   interpret: bool = False) -> Callable:
+    """Compile a mined/merged PE pattern into a fused elementwise kernel.
+
+    Returns f(*inputs) -> output (or tuple of outputs for multi-sink PEs).
+    Inputs must share one 2D shape (callers reshape); non-multiple shapes
+    are padded to the (8k, 128k)-aligned block and cropped back.
+    """
+    free = free_in_ports(pattern)
+    sinks = sink_nodes(pattern)
+    if not free:
+        raise ValueError("pattern has no free in-ports")
+    for n, op in pattern.nodes.items():
+        if op not in _JNP_SEMANTICS and op != "const":
+            raise ValueError(f"op {op!r} not supported in PE kernels")
+    n_in = len(free)
+    body = pe_kernel_body(pattern, n_in, sinks, free)
+
+    @jax.jit
+    def run(*inputs: jax.Array):
+        if len(inputs) != n_in:
+            raise TypeError(f"expected {n_in} inputs, got {len(inputs)}")
+        x0 = inputs[0]
+        shape = x0.shape
+        flat = [i.reshape(-1) for i in inputs]
+        n = flat[0].shape[0]
+        bm, bn = block
+        cols = bn
+        rows = max(1, math.ceil(n / cols))
+        rows_pad = math.ceil(rows / bm) * bm
+        padded = rows_pad * cols
+
+        def pad2d(v):
+            v = jnp.pad(v, (0, padded - n))
+            return v.reshape(rows_pad, cols)
+
+        tiles = [pad2d(v) for v in flat]
+        grid = (rows_pad // bm, 1)
+        in_specs = [pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+                    for _ in range(n_in)]
+        out_specs = [pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+                     for _ in sinks]
+        out_shapes = [jax.ShapeDtypeStruct((rows_pad, cols), x0.dtype)
+                      for _ in sinks]
+        outs = pl.pallas_call(
+            body,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=out_specs if len(sinks) > 1 else out_specs[0],
+            out_shape=out_shapes if len(sinks) > 1 else out_shapes[0],
+            interpret=interpret,
+        )(*tiles)
+        if len(sinks) == 1:
+            outs = (outs,)
+        res = tuple(o.reshape(-1)[:n].reshape(shape) for o in outs)
+        return res if len(sinks) > 1 else res[0]
+
+    return run
+
+
+def kernel_from_config(dp, config_name: str, **kw) -> Callable:
+    """Fused kernel for one configuration of a merged PE datapath."""
+    cfg = dp.configs[config_name]
+    return make_pe_kernel(cfg.pattern, **kw)

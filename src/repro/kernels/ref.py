@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..graphir.graph import Graph, free_in_ports, sink_nodes
+from ..graphir.interp import interpret_pattern
+
+
+def ref_pe(pattern: Graph, *inputs) -> Tuple:
+    """Oracle for pe_fused.make_pe_kernel: numpy graph interpretation."""
+    free = free_in_ports(pattern)
+    port_values = {fp: np.asarray(x, dtype=np.float64)
+                   for fp, x in zip(free, inputs)}
+    vals = interpret_pattern(pattern, port_values)
+    outs = tuple(vals[s] for s in sink_nodes(pattern))
+    return outs if len(outs) > 1 else outs[0]
+
+
+def ref_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                  scale=0.0) -> jax.Array:
+    """Oracle for flash_attention: direct softmax over the full score
+    matrix.  q (B,Hq,S,D); k/v (B,Hkv,S,D)."""
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    scale = scale or 1.0 / math.sqrt(d)
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    sarr = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                      k.astype(jnp.float32)) * scale
+    if softcap:
+        sarr = softcap * jnp.tanh(sarr / softcap)
+    q_pos = jnp.arange(s)[:, None]
+    k_pos = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    if window:
+        mask = mask & (k_pos > q_pos - window)
+    sarr = jnp.where(mask[None, None], sarr, -1e30)
+    p = jax.nn.softmax(sarr, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ref_mamba_scan(a, bx, c) -> jax.Array:
+    """Oracle for mamba_scan: plain sequential recurrence in f64-ish f32."""
+    b, s, d, n = a.shape
+    h = jnp.zeros((b, d, n), jnp.float32)
+    ys = []
+    for t in range(s):
+        h = a[:, t].astype(jnp.float32) * h + bx[:, t].astype(jnp.float32)
+        ys.append(jnp.sum(h * c[:, t].astype(jnp.float32)[:, None, :],
+                          axis=-1))
+    return jnp.stack(ys, axis=1)              # (B, S, D)
+
+
+def ref_gemm_pe(x, w, *extras, epilogue=None, extra_kinds=(),
+                out_dtype=None) -> jax.Array:
+    acc = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+    if epilogue is not None:
+        free = free_in_ports(epilogue)
+        port_values = {free[0]: np.asarray(acc, np.float64)}
+        for fp, e, kind in zip(free[1:], extras, extra_kinds):
+            v = np.asarray(e, np.float64)
+            if kind == "vec":
+                v = v[None, :]
+            port_values[fp] = v
+        vals = interpret_pattern(epilogue, port_values)
+        acc = jnp.asarray(vals[sink_nodes(epilogue)[0]])
+    return acc.astype(out_dtype or x.dtype)

@@ -1,0 +1,272 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh) cell.
+
+This is how the distribution config is proven coherent without hardware:
+``jax.jit(step, in_shardings, out_shardings).lower(**ShapeDtypeStructs)``
+must compile for the 256-chip single-pod mesh and the 512-chip double-pod
+mesh, for every assigned architecture and shape.  Sharding mismatches,
+unsupported collectives and compile-time OOMs all surface here.
+
+Outputs per cell: memory_analysis (fits?), cost_analysis (FLOPs/bytes for
+the roofline), and the collective schedule parsed from the partitioned HLO.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b \
+      --shape train_4k --mesh both --out results/dryrun.jsonl
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh single
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from ..configs import get_config, list_archs
+from ..models.config import ArchConfig
+from ..models.model import init_cache
+from ..models.transformer import param_shapes
+from ..sharding.specs import (activation_shard_fn, batch_axes, batch_pspecs,
+                              cache_pspecs, param_pspecs, to_named)
+from ..train.optimizer import AdamWConfig, opt_state_shapes
+from ..train.steps import (build_decode_step, build_prefill_step,
+                           build_train_step)
+from .mesh import make_production_mesh
+from .roofline import (Roofline, collective_bytes_from_hlo, model_flops)
+from jax.sharding import PartitionSpec as P
+
+SHAPES: Dict[str, Dict[str, Any]] = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+#: per-(arch, shape) overrides applied on top of the baseline (perf levers
+#: recorded in EXPERIMENTS.md §Perf; baseline runs use an empty dict)
+OVERRIDES: Dict[Tuple[str, str], Dict[str, Any]] = {}
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, shape_name: str) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of the cell."""
+    info = SHAPES[shape_name]
+    b, s = info["batch"], info["seq"]
+    if info["kind"] in ("train", "prefill"):
+        if cfg.input_mode == "embeddings":
+            batch = {"inputs": _sds((b, s, cfg.d_model), jnp.bfloat16)}
+        else:
+            batch = {"inputs": _sds((b, s), jnp.int32)}
+        batch["targets"] = _sds((b, s), jnp.int32)
+        if cfg.n_cross_layers:
+            batch["enc"] = _sds((b, cfg.encoder_len, cfg.d_model),
+                                jnp.bfloat16)
+        return batch
+    # decode: one new token + caches of length seq
+    if cfg.input_mode == "embeddings":
+        token = _sds((b, cfg.d_model), jnp.bfloat16)
+    else:
+        token = _sds((b,), jnp.int32)
+    cache = jax.eval_shape(lambda: init_cache(cfg, b, s, jnp.bfloat16))
+    return {"token": token, "cache": cache}
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               microbatches: int = 1, verbose: bool = True
+               ) -> Dict[str, Any]:
+    t0 = time.monotonic()
+    cfg = get_config(arch)
+    info = SHAPES[shape_name]
+    mesh_name = "multi" if multi_pod else "single"
+    chips = 512 if multi_pod else 256
+
+    if shape_name == "long_500k" and not cfg.supports_long_context:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "skipped",
+                "reason": "pure full-attention arch; 500k dense KV decode "
+                          "needs sub-quadratic attention (DESIGN.md §4)"}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    from ..models.perf_flags import set_mesh
+    set_mesh(mesh, batch_axes(multi_pod))
+    shard = activation_shard_fn(mesh, cfg, multi_pod=multi_pod)
+    p_specs = to_named(mesh, param_pspecs(cfg))
+    p_sds = jax.tree.map(lambda s: _sds(s.shape, s.dtype), param_shapes(cfg))
+
+    b = info["batch"]
+    bp = batch_axes(multi_pod)
+    dp_size = 16 * (2 if multi_pod else 1)
+    if b % dp_size == 0:
+        baxis: Any = bp
+    elif b % 16 == 0:
+        baxis = bp[-1]
+    else:
+        baxis = None
+
+    if info["kind"] == "train":
+        opt_cfg = AdamWConfig()
+        opt_sds = opt_state_shapes(p_sds, opt_cfg)
+        # moments share the param sharding; step is replicated
+        opt_specs = type(opt_sds)(
+            step=NamedSharding(mesh, P()),
+            m=p_specs, v=p_specs)
+        batch_specs = to_named(mesh, batch_pspecs(cfg, multi_pod=multi_pod,
+                                                  batch=b))
+        batch_sds = input_specs(cfg, shape_name)
+        step = build_train_step(cfg, opt_cfg, microbatches=microbatches,
+                                shard=shard)
+        metric_specs = {"grad_norm": NamedSharding(mesh, P()),
+                        "lr": NamedSharding(mesh, P()),
+                        "loss": NamedSharding(mesh, P())}
+        jitted = jax.jit(step,
+                         in_shardings=(p_specs, opt_specs, batch_specs),
+                         out_shardings=(p_specs, opt_specs, metric_specs),
+                         donate_argnums=(0, 1))
+        lowered = jitted.lower(p_sds, opt_sds, batch_sds)
+    elif info["kind"] == "prefill":
+        batch_specs = to_named(mesh, batch_pspecs(cfg, multi_pod=multi_pod,
+                                                  batch=b))
+        batch_sds = input_specs(cfg, shape_name)
+        c_specs = to_named(mesh, cache_pspecs(cfg, multi_pod=multi_pod,
+                                              batch=b))
+        vocab_ax = "model" if cfg.vocab % 16 == 0 else None
+        logits_spec = NamedSharding(mesh, P(baxis, vocab_ax))
+        step = build_prefill_step(cfg, smax=info["seq"], shard=shard)
+        jitted = jax.jit(step, in_shardings=(p_specs, batch_specs),
+                         out_shardings=(logits_spec, c_specs))
+        lowered = jitted.lower(p_sds, batch_sds)
+    else:  # decode
+        ins = input_specs(cfg, shape_name)
+        c_specs = to_named(mesh, cache_pspecs(cfg, multi_pod=multi_pod,
+                                              batch=b))
+        vocab_ax = "model" if cfg.vocab % 16 == 0 else None
+        tok_spec = NamedSharding(
+            mesh, P(baxis, None) if cfg.input_mode == "embeddings"
+            else P(baxis))
+        out_tok_spec = NamedSharding(mesh, P(baxis))
+        logits_spec = NamedSharding(mesh, P(baxis, vocab_ax))
+        step = build_decode_step(cfg, shard=shard)
+        jitted = jax.jit(step, in_shardings=(p_specs, tok_spec, c_specs),
+                         out_shardings=(out_tok_spec, logits_spec, c_specs),
+                         donate_argnums=(2,))
+        lowered = jitted.lower(p_sds, ins["token"], ins["cache"])
+
+    t_lower = time.monotonic() - t0
+    compiled = lowered.compile()
+    t_compile = time.monotonic() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+
+    # trip-count-weighted per-device costs from the partitioned HLO
+    # (cost_analysis counts while bodies once — see launch/hlo_cost.py)
+    from .hlo_cost import analyze as hlo_analyze
+    hc = hlo_analyze(hlo)
+    coll_bytes, coll_kinds = hc.collective_bytes, hc.collective_breakdown
+    n_coll = int(hc.collective_count)
+
+    flops_dev = float(hc.flops)
+    bytes_dev = float(hc.bytes)
+    xla_flops_dev = float(cost.get("flops", 0.0))   # loop-once, for reference
+    peak_mem = 0.0
+    mem_str = str(mem)
+    for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "alias_size_in_bytes"):
+        peak_mem += float(getattr(mem, attr, 0.0) or 0.0)
+
+    rl = Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        flops_per_device=flops_dev, bytes_per_device=bytes_dev,
+        collective_bytes_per_device=coll_bytes,
+        collective_breakdown=coll_kinds,
+        model_flops=model_flops(cfg, shape_name, info["batch"], info["seq"]),
+        peak_memory_bytes=peak_mem,
+        collective_count=n_coll,
+    )
+    result = {"status": "ok", "t_lower_s": round(t_lower, 1),
+              "t_compile_s": round(t_compile, 1),
+              "memory_analysis": mem_str,
+              "microbatches": microbatches,
+              "xla_flops_per_device_loop_once": xla_flops_dev,
+              **rl.to_dict()}
+    if verbose:
+        print(rl.row())
+        print(f"    mem: {mem_str}")
+        print(f"    collectives: n={n_coll} {coll_kinds}")
+        print(f"    lower {t_lower:.1f}s compile {t_compile:.1f}s")
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--out", default=None, help="append JSONL here")
+    ap.add_argument("--set", action="append", default=[], metavar="K=V",
+                    help="perf flag override, e.g. --set attention_impl="
+                         "q_outer (see models/perf_flags.py)")
+    args = ap.parse_args()
+
+    if args.set:
+        from ..models.perf_flags import set_flags
+        overrides = {}
+        for kv in args.set:
+            key, val = kv.split("=", 1)
+            if val in ("true", "True"):
+                val = True
+            elif val in ("false", "False"):
+                val = False
+            elif val.isdigit():
+                val = int(val)
+            overrides[key] = val
+        print(f"perf flags: {set_flags(**overrides)}")
+
+    archs = list_archs() if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if args.shape is None else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                try:
+                    r = lower_cell(arch, shape, multi_pod=multi,
+                                   microbatches=args.microbatches)
+                except Exception as e:  # a failing cell is a bug — surface it
+                    r = {"arch": arch, "shape": shape,
+                         "mesh": "multi" if multi else "single",
+                         "status": "error", "error": f"{type(e).__name__}: {e}",
+                         "traceback": traceback.format_exc()[-2000:]}
+                    print(f"ERROR {arch} {shape} "
+                          f"{'multi' if multi else 'single'}: "
+                          f"{r['error'][:200]}")
+                results.append(r)
+                if args.out:
+                    with open(args.out, "a") as f:
+                        f.write(json.dumps(r) + "\n")
+    n_ok = sum(1 for r in results if r["status"] == "ok")
+    n_skip = sum(1 for r in results if r["status"] == "skipped")
+    n_err = sum(1 for r in results if r["status"] == "error")
+    print(f"\ndry-run cells: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

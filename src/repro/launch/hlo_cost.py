@@ -1,0 +1,408 @@
+"""HLO-text cost model with while-loop trip-count weighting.
+
+``compiled.cost_analysis()`` counts each while-loop body ONCE, so for a
+scan-over-layers model it undercounts FLOPs/bytes/collectives by ~n_layers.
+This module parses ``compiled.as_text()`` (post-SPMD-partitioning HLO) into
+its computation graph and aggregates:
+
+* **flops** — dot ops (2 x |result| x |contracted dims|) + elementwise ops
+  (1 flop/element; transcendentals weighted higher), with while bodies
+  multiplied by their trip count (parsed from the loop-condition constant);
+* **bytes** — per-instruction operand+result buffer traffic at fusion
+  boundaries (inside-fusion values never touch HBM), trip-weighted;
+* **collective_bytes** — all-reduce / all-gather / reduce-scatter /
+  all-to-all / collective-permute result bytes x ring multiplier,
+  trip-weighted.
+
+All numbers are per-device (the SPMD module is per-device).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+#: flops-per-element for elementwise opcodes (everything else: 0)
+_ELEMENTWISE = {
+    "add": 1, "subtract": 1, "multiply": 1, "divide": 3, "negate": 1,
+    "abs": 1, "maximum": 1, "minimum": 1, "compare": 1, "select": 1,
+    "and": 1, "or": 1, "xor": 1, "not": 1, "exponential": 6, "log": 6,
+    "tanh": 8, "logistic": 6, "rsqrt": 4, "sqrt": 4, "power": 8,
+    "cosine": 6, "sine": 6, "floor": 1, "round-nearest-afz": 1,
+    "exponential-minus-one": 6, "clamp": 2, "sign": 1,
+    "multiply-add": 2, "erf": 8,
+}
+
+_COLLECTIVES = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+#: instructions that move no HBM bytes themselves
+_FREE = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+         "after-all", "partition-id", "replica-id", "iota"}
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _type_elems(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        if m.group(1) not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+        total += n
+    return total
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class Instr:
+    name: str
+    result_type: str
+    opcode: str
+    operands: List[str]
+    attrs: str
+    raw: str = ""
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    types: Dict[str, str] = field(default_factory=dict)   # value -> type str
+    params: List[str] = field(default_factory=list)       # in header order
+    root: Optional[str] = None
+
+
+_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->\s*(.+?)\s*\{\s*$")
+_INSTR_RE = re.compile(
+    r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^=]*?\)|\S+?))\s+([\w\-]+)\(")
+_PARAM_RE = re.compile(r"%?([\w.\-]+)\s*:\s*((?:\([^)]*\)|[^,)]+(?:\[[^\]]*\])?(?:\{[^}]*\})?))")
+
+
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        # tuple types embed /*index=N*/ comments whose '=' breaks parsing
+        raw = _COMMENT_RE.sub("", raw)
+        line = raw.strip()
+        if not line:
+            continue
+        if cur is None:
+            m = _HEADER_RE.match(line)
+            if m:
+                cur = Computation(m.group(1))
+                if raw.lstrip().startswith("ENTRY"):
+                    entry = cur.name
+                # header params carry types (order matters for fusion I/O)
+                for pm in _PARAM_RE.finditer(m.group(2)):
+                    cur.types[pm.group(1)] = pm.group(2)
+                    cur.params.append(pm.group(1))
+            continue
+        if line == "}" or line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rtype, opcode = m.group(1), m.group(2), m.group(3)
+        # operand names: inside the first balanced paren group after opcode
+        start = line.find(opcode + "(") + len(opcode)
+        depth = 0
+        end = start
+        for i in range(start, len(line)):
+            if line[i] == "(":
+                depth += 1
+            elif line[i] == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operand_str = line[start + 1:end]
+        operands = re.findall(r"%([\w.\-]+)", operand_str)
+        attrs = line[end + 1:]
+        cur.types[name] = rtype
+        cur.instrs.append(Instr(name, rtype, opcode, operands, attrs, line))
+        if line.startswith("ROOT"):
+            cur.root = name
+    return comps, entry
+
+
+_CALLED_RE = re.compile(r"(?:calls|to_apply|body|condition|branch_computations)="
+                        r"\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?")
+
+
+def _called(attrs: str) -> Dict[str, List[str]]:
+    out: Dict[str, List[str]] = {}
+    for key in ("calls", "to_apply", "body", "condition"):
+        m = re.search(key + r"=%?([\w.\-]+)", attrs)
+        if m:
+            out[key] = [m.group(1)]
+    m = re.search(r"branch_computations=\{([^}]*)\}", attrs)
+    if m:
+        out["branches"] = re.findall(r"%?([\w.\-]+)", m.group(1))
+    return out
+
+
+def _trip_count(cond: Computation,
+                comps: Dict[str, "Computation"]) -> int:
+    """Trip count heuristic: largest integer constant in the loop condition
+    (scan lowers to  induction_var < constant ), recursing one level into
+    computations the condition calls (fused compares)."""
+    best = 1
+    stack = [cond]
+    for ins in cond.instrs:
+        for subs in _called(ins.attrs).values():
+            for sub in subs:
+                if sub in comps:
+                    stack.append(comps[sub])
+    for comp in stack:
+        for ins in comp.instrs:
+            if ins.opcode == "constant":
+                m = re.search(r"constant\((\d+)\)", ins.raw)
+                if m:
+                    best = max(best, int(m.group(1)))
+    return best
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_count: float = 0.0
+    collective_breakdown: Dict[str, float] = field(default_factory=dict)
+    bytes_by_opcode: Dict[str, float] = field(default_factory=dict)
+    flops_by_opcode: Dict[str, float] = field(default_factory=dict)
+
+
+def analyze(text: str, *, debug_opcodes: bool = False) -> HloCost:
+    comps, entry = parse_hlo(text)
+    if entry is None:
+        return HloCost()
+    memo: Dict[Tuple[str, bool], HloCost] = {}
+
+    def comp_cost(name: str, count_bytes: bool) -> HloCost:
+        key = (name, count_bytes)
+        if key in memo:
+            return memo[key]
+        comp = comps.get(name)
+        total = HloCost()
+        memo[key] = total                      # cycle guard
+        if comp is None:
+            return total
+        def merge(c: HloCost, mult: float) -> None:
+            total.flops += c.flops * mult
+            total.bytes += c.bytes * mult
+            total.collective_bytes += c.collective_bytes * mult
+            total.collective_count += c.collective_count * mult
+            for k, v in c.collective_breakdown.items():
+                total.collective_breakdown[k] = \
+                    total.collective_breakdown.get(k, 0) + v * mult
+            for k, v in c.bytes_by_opcode.items():
+                total.bytes_by_opcode[k] = \
+                    total.bytes_by_opcode.get(k, 0) + v * mult
+            for k, v in c.flops_by_opcode.items():
+                total.flops_by_opcode[k] = \
+                    total.flops_by_opcode.get(k, 0) + v * mult
+
+        def add_bytes(opcode: str, b: float) -> None:
+            total.bytes += b
+            total.bytes_by_opcode[opcode] = \
+                total.bytes_by_opcode.get(opcode, 0) + b
+
+        def add_flops(opcode: str, f: float) -> None:
+            total.flops += f
+            total.flops_by_opcode[opcode] = \
+                total.flops_by_opcode.get(opcode, 0) + f
+
+        for ins in comp.instrs:
+            called = _called(ins.attrs)
+            if ins.opcode == "while":
+                body = called.get("body", [None])[0]
+                cond = called.get("condition", [None])[0]
+                trips = _trip_count(comps[cond], comps) if cond in comps else 1
+                for sub in (body, cond):
+                    if sub in comps:
+                        merge(comp_cost(sub, count_bytes), trips)
+                continue
+            if ins.opcode == "conditional":
+                branches = called.get("branches", [])
+                subs = [comp_cost(s, count_bytes) for s in branches
+                        if s in comps]
+                if subs:                        # worst-case branch
+                    worst = max(subs, key=lambda c: c.flops + c.bytes)
+                    merge(worst, 1.0)
+                continue
+            if ins.opcode == "fusion":
+                sub = called.get("calls", [None])[0]
+                if sub in comps:
+                    c = comp_cost(sub, False)   # fusion interior: flops only
+                    for k, v in c.flops_by_opcode.items():
+                        total.flops_by_opcode[k] = \
+                            total.flops_by_opcode.get(k, 0) + v
+                    total.flops += c.flops
+                    total.collective_bytes += c.collective_bytes
+                    total.collective_count += c.collective_count
+                    for k, v in c.collective_breakdown.items():
+                        total.collective_breakdown[k] = \
+                            total.collective_breakdown.get(k, 0) + v
+                    add_bytes("fusion:" + (sub.split(".")[0] if sub else "?"),
+                              _fusion_io_bytes(comp, ins, comps[sub]))
+                else:
+                    add_bytes("fusion", _io_bytes(comp, ins))
+                continue
+            if ins.opcode in ("call", "custom-call", "map", "reduce",
+                              "reduce-window", "sort", "scatter",
+                              "select-and-scatter"):
+                per_elem = ins.opcode in ("map", "reduce", "reduce-window",
+                                          "scatter", "select-and-scatter")
+                if per_elem:
+                    in_t = comp.types.get(ins.operands[0], "") \
+                        if ins.operands else ""
+                    scale = max(1, _type_elems(in_t))
+                else:
+                    scale = 1
+                for subs in called.values():
+                    for sub in subs:
+                        if sub in comps:
+                            c = comp_cost(sub, False)
+                            add_flops(ins.opcode, c.flops * scale)
+                if count_bytes and ins.opcode not in _FREE:
+                    add_bytes(ins.opcode, _io_bytes(comp, ins))
+                continue
+
+            if ins.opcode in _COLLECTIVES:
+                b = _type_bytes(ins.result_type) * _COLLECTIVES[ins.opcode]
+                total.collective_bytes += b
+                total.collective_count += 1
+                total.collective_breakdown[ins.opcode] = \
+                    total.collective_breakdown.get(ins.opcode, 0) + b
+            elif ins.opcode.endswith("-start") and \
+                    ins.opcode[:-6] in _COLLECTIVES:
+                kind = ins.opcode[:-6]
+                b = _type_bytes(ins.result_type) * _COLLECTIVES[kind]
+                total.collective_bytes += b
+                total.collective_count += 1
+                total.collective_breakdown[kind] = \
+                    total.collective_breakdown.get(kind, 0) + b
+
+            if ins.opcode in ("dot", "dot_general"):
+                add_flops("dot", _dot_flops(comp, ins))
+            elif ins.opcode == "convolution":
+                add_flops("convolution", _conv_flops(comp, ins))
+            elif ins.opcode in _ELEMENTWISE:
+                add_flops(ins.opcode, _ELEMENTWISE[ins.opcode] *
+                          _type_elems(ins.result_type))
+
+            if count_bytes and ins.opcode not in _FREE:
+                add_bytes(ins.opcode, _io_bytes(comp, ins))
+        memo[key] = total
+        return total
+
+    _SLICY = {"dynamic-slice", "slice", "gather", "get-tuple-element",
+              "bitcast", "reshape", "transpose"}
+
+    def _io_bytes(comp: Computation, ins: Instr) -> float:
+        # in-place update ops touch only the updated window, not the buffer
+        if ins.opcode == "dynamic-update-slice" and len(ins.operands) >= 2:
+            upd = comp.types.get(ins.operands[1], "")
+            return 2.0 * _type_bytes(upd)
+        if ins.opcode in ("dynamic-slice", "slice"):
+            return 2.0 * _type_bytes(ins.result_type)
+        b = _type_bytes(ins.result_type)
+        for op in ins.operands:
+            t = comp.types.get(op)
+            if t:
+                b += _type_bytes(t)
+        return b
+
+    def _fusion_io_bytes(comp: Computation, ins: Instr,
+                         sub: Computation) -> float:
+        """Fusion boundary traffic with slice-aware operand accounting: a
+        fused dynamic-slice of a stacked (L, ...) buffer reads one slice per
+        call, not the whole stack; a fused dynamic-update-slice root writes
+        one window."""
+        # writes
+        b = 0.0
+        root_ins = next((i for i in sub.instrs if i.name == sub.root), None)
+        if root_ins is not None and root_ins.opcode == "dynamic-update-slice" \
+                and len(root_ins.operands) >= 2:
+            b += 2.0 * _type_bytes(sub.types.get(root_ins.operands[1], ""))
+        else:
+            b += _type_bytes(ins.result_type)
+        # reads
+        uses_by_param: Dict[str, List[Instr]] = {}
+        for i2 in sub.instrs:
+            for op in i2.operands:
+                if op in sub.types and op in sub.params:
+                    uses_by_param.setdefault(op, []).append(i2)
+        for site_op, pname in zip(ins.operands, sub.params):
+            uses = uses_by_param.get(pname, [])
+            if uses and all(u.opcode in _SLICY for u in uses):
+                b += sum(_type_bytes(u.result_type) for u in uses)
+            else:
+                t = comp.types.get(site_op)
+                if t:
+                    b += _type_bytes(t)
+        return b
+
+    def _dot_flops(comp: Computation, ins: Instr) -> float:
+        out_elems = _type_elems(ins.result_type)
+        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.attrs)
+        contract = 1
+        if m and ins.operands:
+            lhs_t = comp.types.get(ins.operands[0], "")
+            dims = _shape_dims(lhs_t)
+            for d in m.group(1).split(","):
+                if d and int(d) < len(dims):
+                    contract *= dims[int(d)]
+        return 2.0 * out_elems * contract
+
+    def _conv_flops(comp: Computation, ins: Instr) -> float:
+        out_elems = _type_elems(ins.result_type)
+        rhs_t = comp.types.get(ins.operands[1], "") if len(ins.operands) > 1 \
+            else ""
+        kernel = 1
+        for d in _shape_dims(rhs_t)[:-1]:
+            kernel *= d
+        return 2.0 * out_elems * kernel
+
+    return comp_cost(entry, True)

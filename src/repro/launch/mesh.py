@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+Single pod = 16 x 16 = 256 chips (axes ``data x model``); two pods = 512
+chips (``pod x data x model``).  Defined as a function so importing this
+module never touches jax device state (the dry-run must set XLA_FLAGS before
+the first jax call).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} — "
+            "run under launch/dryrun.py which sets "
+            "--xla_force_host_platform_device_count=512")
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+# TPU v5e hardware constants (roofline targets)
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link (~per-direction)
+HBM_BYTES = 16 * 1024 ** 3        # 16 GiB per chip

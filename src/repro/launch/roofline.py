@@ -1,0 +1,181 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), all in seconds:
+
+  compute    = HLO_FLOPs_global   / (chips x 197e12 FLOP/s)
+  memory     = HLO_bytes_global   / (chips x 819e9 B/s)
+  collective = collective_bytes   / (chips x 50e9 B/s per link)
+
+``compiled.cost_analysis()`` reports the per-device (SPMD) program, so the
+global numbers are per-device x chips and the chips cancel; we keep the
+brief's formula by computing global = per_device * chips.
+
+collective_bytes is parsed from ``compiled.as_text()`` (post-partitioning
+HLO): every all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute contributes its result-buffer bytes, with the standard
+ring multipliers (all-reduce moves ~2x its payload).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from .mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0,
+}
+
+# result shapes like  bf16[128,32768,8,128]{3,2,1,0}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVE_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|\S+?))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", )
+
+#: traffic multiplier per collective kind (ring algorithms, payload-relative)
+_MULT = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Tuple[float, Dict[str, float]]:
+    """Per-device collective traffic (bytes) summed over the module."""
+    per_kind: Dict[str, float] = {}
+    seen_done = set()
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        result_type, kind = m.group(1), m.group(2)
+        b = _shape_bytes(result_type) * _MULT[kind]
+        per_kind[kind] = per_kind.get(kind, 0.0) + b
+    return sum(per_kind.values()), per_kind
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    collective_breakdown: Dict[str, float] = field(default_factory=dict)
+    model_flops: float = 0.0            # 6*N*D (dense) / 6*N_active*D (MoE)
+    peak_memory_bytes: float = 0.0      # from memory_analysis
+    collective_count: int = 0
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS_BF16
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes_per_device / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs_global — catches remat/redundancy waste."""
+        total = self.flops_per_device * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """How close the step is to the compute roofline if it ran at the
+        max(term) bound: compute_s / bound_s."""
+        return self.compute_s / self.bound_s if self.bound_s else 0.0
+
+    def row(self) -> str:
+        return (f"{self.arch:<22} {self.shape:<12} {self.mesh:<7} "
+                f"cmp={self.compute_s*1e3:9.3f}ms "
+                f"mem={self.memory_s*1e3:9.3f}ms "
+                f"col={self.collective_s*1e3:9.3f}ms "
+                f"dom={self.dominant:<10} "
+                f"useful={self.useful_ratio:5.2f} "
+                f"roof={self.roofline_fraction:5.2f}")
+
+    def to_dict(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "collective_breakdown": self.collective_breakdown,
+            "collective_count": self.collective_count,
+            "model_flops": self.model_flops,
+            "peak_memory_bytes": self.peak_memory_bytes,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def count_params(cfg) -> int:
+    from ..models.transformer import param_shapes
+    import numpy as np
+    import jax
+    shapes = param_shapes(cfg)
+    return int(sum(int(np.prod(s.shape))
+                   for s in jax.tree.leaves(shapes)))
+
+
+def count_active_params(cfg) -> int:
+    """Active params per token (MoE: top_k + shared experts only)."""
+    n = count_params(cfg)
+    if cfg.moe is None:
+        return n
+    moe = cfg.moe
+    per_expert = 3 * cfg.d_model * moe.d_expert
+    n_self = cfg.n_self_layers if cfg.mixer != "mamba" else cfg.n_layers
+    routed_total = n_self * moe.n_experts_padded * per_expert
+    routed_active = n_self * moe.top_k * per_expert
+    return n - routed_total + routed_active
+
+
+def model_flops(cfg, shape_name: str, batch: int, seq: int) -> float:
+    """6*N_active*D for training, 2*N_active*D for inference steps."""
+    n_active = count_active_params(cfg)
+    if shape_name.startswith("train"):
+        return 6.0 * n_active * batch * seq
+    if shape_name.startswith("prefill"):
+        return 2.0 * n_active * batch * seq
+    # decode shapes: one token per sequence
+    return 2.0 * n_active * batch

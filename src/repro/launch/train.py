@@ -1,0 +1,85 @@
+"""Training launcher.
+
+CPU-scale end-to-end run (examples/train_lm.py wraps this) and the entry
+point a real deployment would invoke per host with jax.distributed.  For
+the 512-chip production mesh the same build_train_step is lowered by
+launch/dryrun.py — this driver is about actually *stepping*.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
+      --reduced --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ck
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config, list_archs
+from ..data.pipeline import DataConfig
+from ..models.transformer import init_params
+from ..train.optimizer import AdamWConfig, init_opt_state
+from ..train.steps import build_train_step
+from ..train.trainer import Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b", choices=list_archs())
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the reduced smoke config (CPU scale)")
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--n-layers", type=int, default=4)
+    ap.add_argument("--d-ff", type=int, default=512)
+    ap.add_argument("--vocab", type=int, default=512)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--fail-at", type=int, default=None,
+                    help="inject a fault at this step (tests restart)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced(n_layers=args.n_layers, d_model=args.d_model,
+                          d_ff=args.d_ff, vocab=args.vocab, seq=args.seq)
+
+    params = init_params(cfg, jax.random.PRNGKey(args.seed))
+    n_params = sum(int(p.size) for p in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M")
+
+    opt_cfg = AdamWConfig(lr_peak=args.lr, warmup_steps=max(10, args.steps // 20),
+                          total_steps=args.steps)
+    opt_state = init_opt_state(params, opt_cfg)
+    step_fn = jax.jit(build_train_step(cfg, opt_cfg,
+                                       microbatches=args.microbatches),
+                      donate_argnums=(0, 1))
+
+    data_cfg = DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                          global_batch=args.batch, seed=args.seed)
+    trainer = Trainer(TrainerConfig(total_steps=args.steps,
+                                    ckpt_every=args.ckpt_every,
+                                    ckpt_dir=args.ckpt_dir),
+                      step_fn, params, opt_state, data_cfg)
+    t0 = time.time()
+    state = trainer.run(fail_at=args.fail_at)
+    dt = time.time() - t0
+    print(json.dumps({"history": trainer.history,
+                      "steps": state.step,
+                      "restarts": state.restarts,
+                      "stragglers": state.stragglers,
+                      "wall_s": round(dt, 1)}, indent=2))
+
+
+if __name__ == "__main__":
+    main()

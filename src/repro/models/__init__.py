@@ -1,0 +1,11 @@
+"""Model zoo: unified decoder LM for all assigned architectures."""
+
+from .config import ArchConfig, MoEConfig, SSMConfig
+from .model import (cache_shapes, decode_step, forward, init_cache, prefill)
+from .transformer import init_params, layer_shapes, param_shapes
+
+__all__ = [
+    "ArchConfig", "MoEConfig", "SSMConfig", "cache_shapes", "decode_step",
+    "forward", "init_cache", "prefill", "init_params", "layer_shapes",
+    "param_shapes",
+]

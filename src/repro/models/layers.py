@@ -1,0 +1,206 @@
+"""Transformer building blocks (pure JAX, bf16-compute friendly).
+
+Attention is implemented *blockwise* (online-softmax over KV chunks, i.e.
+flash-attention expressed in jnp/lax) so that 32k-token prefills never
+materialize an (S x S) score matrix.  Supports GQA, causal masking, sliding
+windows, logit soft-capping (gemma2), QK-norm (gemma3) and cross-attention
+(VLM).  On real TPUs the Pallas kernel in repro.kernels.flash_attention
+replaces the inner loop; the jnp path is the portable/dry-run reference.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6,
+             *, plus_one: bool = False) -> jax.Array:
+    from .perf_flags import get_flags
+    dt = x.dtype
+    if get_flags().norm_dtype == "bf16" and dt == jnp.bfloat16:
+        # f32 variance accumulation, bf16 elementwise math — no f32 copy of
+        # the (B,S,D) stream ever hits HBM (§Perf hillclimb)
+        var = jnp.mean(jnp.square(x).astype(jnp.float32), axis=-1,
+                       keepdims=True)
+        inv = lax.rsqrt(var + eps).astype(dt)
+        scale = (1.0 + w).astype(dt) if plus_one else w.astype(dt)
+        return x * inv * scale
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * lax.rsqrt(var + eps)
+    scale = (1.0 + w.astype(jnp.float32)) if plus_one else w.astype(jnp.float32)
+    return (y * scale).astype(dt)
+
+
+def soft_cap(x: jax.Array, cap: float) -> jax.Array:
+    return (cap * jnp.tanh(x / cap)).astype(x.dtype)
+
+
+# -- rotary embeddings ---------------------------------------------------------
+
+def rope_tables(positions: jax.Array, head_dim: int,
+                theta: float = 10000.0) -> Tuple[jax.Array, jax.Array]:
+    """cos/sin tables for given positions: (..., head_dim/2)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs   # (..., half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, S, H, D); cos/sin: (B, S, D/2) or (S, D/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# -- blockwise attention ----------------------------------------------------------
+
+def _chunk_attn_update(carry, q, k_c, v_c, mask_c, scale, softcap):
+    """Online-softmax update for one KV chunk.
+
+    q: (B, Hq, Sq, D); k_c/v_c: (B, Hkv, C, D); mask_c: (B?, Sq, C) boolean
+    carry = (acc (B,Hq,Sq,D), m (B,Hq,Sq), l (B,Hq,Sq))
+    """
+    acc, m, l = carry
+    b, hq, sq, d = q.shape
+    hkv = k_c.shape[1]
+    group = hq // hkv
+    qg = q.reshape(b, hkv, group, sq, d)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(jnp.float32),
+                   k_c.astype(jnp.float32)) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    s = s.reshape(b, hq, sq, -1)
+    s = jnp.where(mask_c[:, None, :, :], s, -1e30)
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    alpha = jnp.exp(m - m_new)
+    l_new = l * alpha + jnp.sum(p, axis=-1)
+    pg = p.reshape(b, hkv, group, sq, -1)
+    pv = jnp.einsum("bhgqk,bhkd->bhgqd", pg, v_c.astype(jnp.float32))
+    acc_new = acc * alpha[..., None] + pv.reshape(b, hq, sq, d)
+    return acc_new, m_new, l_new
+
+
+def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        q_pos: jax.Array, kv_pos: jax.Array,
+                        causal: bool = True, window=None,
+                        softcap: float = 0.0, scale: float = 0.0,
+                        chunk: int = 512) -> jax.Array:
+    """Flash-style attention in jnp.
+
+    q: (B, Sq, Hq, D);  k/v: (B, Skv, Hkv, D);
+    q_pos: (B, Sq) absolute positions; kv_pos: (B, Skv).
+    window masks keys older than `window` positions (local attention); it
+    may be a Python int or a traced scalar (per-layer local/global flags
+    inside a scan become ``where(is_global, 2**30, w)``).  None/0 = full.
+    Returns (B, Sq, Hq, D) in q.dtype.
+    """
+    b, sq, hq, d = q.shape
+    skv = k.shape[1]
+    scale = scale or (1.0 / math.sqrt(d))
+    qt = jnp.swapaxes(q, 1, 2)                       # (B,Hq,Sq,D)
+    kt = jnp.swapaxes(k, 1, 2)                       # (B,Hkv,Skv,D)
+    vt = jnp.swapaxes(v, 1, 2)
+
+    chunk = min(chunk, skv)
+    n_chunks = -(-skv // chunk)
+    pad = n_chunks * chunk - skv
+    if pad:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=-1)
+
+    hkv = kt.shape[1]
+    kc = jnp.moveaxis(kt.reshape(b, hkv, n_chunks, chunk, d), 2, 0)
+    vc = jnp.moveaxis(vt.reshape(b, hkv, n_chunks, chunk, d), 2, 0)
+    pc = kv_pos.reshape(b, n_chunks, chunk).swapaxes(0, 1)   # (n,B,C)
+
+    acc0 = jnp.zeros((b, hq, sq, d), jnp.float32)
+    m0 = jnp.full((b, hq, sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, hq, sq), jnp.float32)
+
+    use_window = window is not None and not (
+        isinstance(window, int) and window == 0)
+
+    def body(carry, xs):
+        k_c, v_c, p_c = xs                       # (B,Hkv,C,D), (B,C)
+        mask = p_c[:, None, :] >= 0              # (B,1,C) valid keys
+        if causal:
+            mask = mask & (p_c[:, None, :] <= q_pos[:, :, None])
+        if use_window:
+            mask = mask & (p_c[:, None, :] > q_pos[:, :, None] - window)
+        carry = _chunk_attn_update(carry, qt, k_c, v_c, mask, scale, softcap)
+        return carry, None
+
+    # xs leaves have leading n_chunks axis; k_c arrives as (B,Hkv,C,D)
+    (acc, m, l), _ = lax.scan(body, (acc0, m0, l0), (kc, vc, pc))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return jnp.swapaxes(out, 1, 2).astype(q.dtype)
+
+
+def blockwise_attention_qouter(q, k, v, *, q_pos, kv_pos, causal=True,
+                               window=None, softcap=0.0, scale=0.0,
+                               q_chunk=512, kv_chunk=512):
+    """Flash loop order: scan over q-tiles, online-softmax accumulator per
+    tile.  The (B,H,S,D) f32 accumulator of the kv-inner baseline round-trips
+    HBM once per kv chunk; here it is (B,H,q_chunk,D), re-created per q-tile
+    (§Perf hillclimb; mirrors kernels/flash_attention.py)."""
+    b, sq, hq, d = q.shape
+    q_chunk = min(q_chunk, sq)
+    nq = -(-sq // q_chunk)
+    pad = nq * q_chunk - sq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad)), constant_values=2 ** 30)
+    qs = jnp.moveaxis(q.reshape(b, nq, q_chunk, hq, d), 1, 0)
+    ps = jnp.moveaxis(q_pos.reshape(b, nq, q_chunk), 1, 0)
+
+    def qbody(_, xs):
+        q_c, p_c = xs
+        out_c = blockwise_attention(q_c, k, v, q_pos=p_c, kv_pos=kv_pos,
+                                    causal=causal, window=window,
+                                    softcap=softcap, scale=scale,
+                                    chunk=kv_chunk)
+        return None, out_c
+
+    _, outs = lax.scan(qbody, None, (qs, ps))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, nq * q_chunk, hq, d)
+    return out[:, :sq]
+
+
+# -- MLPs ------------------------------------------------------------------------
+
+def mlp_swiglu(x: jax.Array, wg: jax.Array, wu: jax.Array, wd: jax.Array
+               ) -> jax.Array:
+    g = jnp.einsum("bsd,df->bsf", x, wg)
+    u = jnp.einsum("bsd,df->bsf", x, wu)
+    return jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u, wd).astype(x.dtype)
+
+
+def mlp_gelu(x: jax.Array, wi: jax.Array, wo: jax.Array) -> jax.Array:
+    h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, wi), approximate=True)
+    return jnp.einsum("bsf,fd->bsd", h, wo).astype(x.dtype)
+
+
+def mlp_geglu(x: jax.Array, wg: jax.Array, wu: jax.Array, wd: jax.Array
+              ) -> jax.Array:
+    g = jnp.einsum("bsd,df->bsf", x, wg)
+    u = jnp.einsum("bsd,df->bsf", x, wu)
+    h = jax.nn.gelu(g, approximate=True) * u
+    return jnp.einsum("bsf,fd->bsd", h, wd).astype(x.dtype)

@@ -1,0 +1,314 @@
+"""Model-level entry points: forward / prefill / decode_step.
+
+Layers are executed with ``lax.scan`` over stacked parameters (compile time
+independent of depth) with each body wrapped in ``jax.checkpoint`` (full
+rematerialization — only layer-boundary activations survive to the backward
+pass).  VLM backbones scan over (self x (g-1), cross) groups.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ArchConfig
+from .layers import rms_norm, soft_cap, blockwise_attention
+from .transformer import (Params, ShardFn, _attention, _noshard,
+                          cross_layer_body, layer_body)
+
+
+def _embed(params: Params, cfg: ArchConfig, tokens_or_embeds,
+           compute_dtype) -> jax.Array:
+    if cfg.input_mode == "embeddings":
+        x = tokens_or_embeds.astype(compute_dtype)
+    else:
+        x = jnp.take(params["embed"], tokens_or_embeds, axis=0
+                     ).astype(compute_dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, compute_dtype)
+    return x
+
+
+def _unembed(params: Params, cfg: ArchConfig, x) -> jax.Array:
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head")
+    if head is None:
+        logits = jnp.einsum("bsd,vd->bsv", x,
+                            params["embed"].astype(x.dtype))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+    if cfg.final_softcap:
+        logits = soft_cap(logits.astype(jnp.float32), cfg.final_softcap)
+    return logits
+
+
+def _kinds(cfg: ArchConfig) -> jax.Array:
+    return jnp.asarray(cfg.layer_kinds(), jnp.int32)
+
+
+def _split_groups(tree, n_groups: int):
+    """Reshape stacked (L, ...) leaves to (n_groups, L//n_groups, ...)."""
+    return jax.tree.map(
+        lambda a: a.reshape((n_groups, a.shape[0] // n_groups) + a.shape[1:]),
+        tree)
+
+
+# ---------------------------------------------------------------------------
+# forward (teacher-forced logits — training / perplexity eval)
+# ---------------------------------------------------------------------------
+
+def forward(params: Params, cfg: ArchConfig, tokens, *,
+            enc: Optional[jax.Array] = None,
+            compute_dtype=jnp.bfloat16,
+            return_hidden: bool = False,
+            shard: ShardFn = _noshard) -> jax.Array:
+    b, s = tokens.shape[:2]
+    x = _embed(params, cfg, tokens, compute_dtype)
+    x = shard(x, "hidden")
+    q_pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def body(h, xs):
+        lp, kind = xs
+        h, _, _ = layer_body(h, lp, cfg, q_pos=q_pos, is_global=kind,
+                             compute_dtype=compute_dtype, shard=shard)
+        return h, None
+
+    body_ck = jax.checkpoint(body)
+
+    if cfg.n_cross_layers:
+        g = cfg.cross_attn_every
+        n_groups = cfg.n_cross_layers
+        self_groups = _split_groups(params["layers"], n_groups)
+        kind_groups = _kinds(cfg).reshape(n_groups, g - 1)
+
+        def group(h, xs):
+            self_lps, kinds_g, cross_lp = xs
+            h, _ = lax.scan(body_ck, h, (self_lps, kinds_g))
+            h = jax.checkpoint(
+                lambda hh, lp: cross_layer_body(
+                    hh, lp, cfg, enc.astype(compute_dtype), q_pos=q_pos,
+                    compute_dtype=compute_dtype, shard=shard))(h, cross_lp)
+            return h, None
+
+        x, _ = lax.scan(group, x,
+                        (self_groups, kind_groups, params["cross_layers"]))
+    else:
+        x, _ = lax.scan(body_ck, x, (params["layers"], _kinds(cfg)))
+
+    if return_hidden:
+        return x
+    logits = _unembed(params, cfg, x)
+    return shard(logits, "logits")
+
+
+# ---------------------------------------------------------------------------
+# prefill: run the prompt, return caches sized `smax`
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, smax: int,
+               dtype=jnp.bfloat16) -> Dict[str, Any]:
+    n_self = cfg.n_self_layers if cfg.mixer != "mamba" else cfg.n_layers
+    cache: Dict[str, Any] = {"len": jnp.zeros((), jnp.int32)}
+    hd = cfg.head_dim_of
+    if cfg.mixer in ("attn", "hymba"):
+        cache["k"] = jnp.zeros((n_self, batch, smax, cfg.n_kv, hd), dtype)
+        cache["v"] = jnp.zeros((n_self, batch, smax, cfg.n_kv, hd), dtype)
+    if cfg.mixer in ("mamba", "hymba"):
+        di = cfg.ssm.expand * cfg.d_model
+        kw = max(cfg.ssm.d_conv - 1, 1)
+        cache["ssm_conv"] = jnp.zeros((n_self, batch, kw, di), dtype)
+        cache["ssm_h"] = jnp.zeros((n_self, batch, di, cfg.ssm.d_state),
+                                   jnp.float32)
+    if cfg.n_cross_layers:
+        cache["cross_k"] = jnp.zeros(
+            (cfg.n_cross_layers, batch, cfg.encoder_len, cfg.n_kv, hd), dtype)
+        cache["cross_v"] = jnp.zeros_like(cache["cross_k"])
+    return cache
+
+
+def cache_shapes(cfg: ArchConfig, batch: int, smax: int, dtype=jnp.bfloat16):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, smax, dtype))
+
+
+def prefill(params: Params, cfg: ArchConfig, tokens, *, smax: int,
+            enc: Optional[jax.Array] = None,
+            compute_dtype=jnp.bfloat16,
+            shard: ShardFn = _noshard) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Returns (last-position logits (B, V), filled caches)."""
+    b, s = tokens.shape[:2]
+    x = _embed(params, cfg, tokens, compute_dtype)
+    x = shard(x, "hidden")
+    q_pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    cache = init_cache(cfg, b, smax, compute_dtype)
+    has_attn = cfg.mixer in ("attn", "hymba")
+    has_ssm = cfg.mixer in ("mamba", "hymba")
+
+    def body(h, xs):
+        lp, kind, kc, vc = xs
+        zero_state = ({"conv": jnp.zeros_like(cache["ssm_conv"][0]),
+                       "h": jnp.zeros_like(cache["ssm_h"][0])}
+                      if has_ssm else None)
+        h, new_cache, new_state = layer_body(
+            h, lp, cfg, q_pos=q_pos, is_global=kind,
+            cache=(kc, vc) if has_attn else None,
+            cache_len=jnp.int32(0) if has_attn else None,
+            ssm_state=zero_state,
+            compute_dtype=compute_dtype, shard=shard)
+        ys = {}
+        if has_attn:
+            ys["k"], ys["v"] = new_cache
+        if has_ssm:
+            ys["ssm_conv"] = new_state["conv"]
+            ys["ssm_h"] = new_state["h"]
+        return h, ys
+
+    kc0 = cache.get("k")
+    vc0 = cache.get("v")
+    n_self = cfg.n_self_layers if cfg.mixer != "mamba" else cfg.n_layers
+    dummy = jnp.zeros((n_self, 0)) if not has_attn else None
+
+    if cfg.n_cross_layers:
+        g = cfg.cross_attn_every
+        n_groups = cfg.n_cross_layers
+        self_groups = _split_groups(params["layers"], n_groups)
+        kind_groups = _kinds(cfg).reshape(n_groups, g - 1)
+        kc_g = _split_groups(kc0, n_groups)
+        vc_g = _split_groups(vc0, n_groups)
+        enc_c = enc.astype(compute_dtype)
+        hd = cfg.head_dim_of
+
+        def group(h, xs):
+            self_lps, kinds_g, kcs, vcs, cross_lp = xs
+            h, ys = lax.scan(jax.checkpoint(body), h,
+                             (self_lps, kinds_g, kcs, vcs))
+            # cross layer + cache its K/V
+            ck = jnp.einsum("bsd,dh->bsh", enc_c, cross_lp["wk"].astype(
+                compute_dtype)).reshape(b, -1, cfg.n_kv, hd)
+            cv = jnp.einsum("bsd,dh->bsh", enc_c, cross_lp["wv"].astype(
+                compute_dtype)).reshape(b, -1, cfg.n_kv, hd)
+            h = jax.checkpoint(
+                lambda hh, lp: cross_layer_body(
+                    hh, lp, cfg, enc_c, q_pos=q_pos,
+                    compute_dtype=compute_dtype, shard=shard))(h, cross_lp)
+            ys["cross_k"] = ck
+            ys["cross_v"] = cv
+            return h, ys
+
+        x, ys = lax.scan(group, x, (self_groups, kind_groups, kc_g, vc_g,
+                                    params["cross_layers"]))
+        cache["k"] = ys["k"].reshape((-1,) + ys["k"].shape[2:])
+        cache["v"] = ys["v"].reshape((-1,) + ys["v"].shape[2:])
+        cache["cross_k"] = ys["cross_k"]
+        cache["cross_v"] = ys["cross_v"]
+    else:
+        xs = (params["layers"], _kinds(cfg),
+              kc0 if has_attn else dummy, vc0 if has_attn else dummy)
+        x, ys = lax.scan(jax.checkpoint(body), x, xs)
+        for key in ("k", "v", "ssm_conv", "ssm_h"):
+            if key in ys:
+                cache[key] = ys[key]
+
+    cache["len"] = jnp.asarray(s, jnp.int32)
+    logits = _unembed(params, cfg, x[:, -1:])[:, 0]
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# decode: one token against the caches
+# ---------------------------------------------------------------------------
+
+def decode_step(params: Params, cfg: ArchConfig, token, cache, *,
+                compute_dtype=jnp.bfloat16,
+                shard: ShardFn = _noshard) -> Tuple[jax.Array, Dict[str, Any]]:
+    """token: (B,) int32 (or (B, 1, D) embeddings).  Returns (logits (B,V),
+    updated cache)."""
+    if cfg.input_mode == "embeddings":
+        b = token.shape[0]
+        x = token.reshape(b, 1, -1).astype(compute_dtype)
+        if cfg.embed_scale:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, compute_dtype)
+    else:
+        b = token.shape[0]
+        x = _embed(params, cfg, token.reshape(b, 1), compute_dtype)
+    pos = cache["len"]
+    q_pos = jnp.full((b, 1), pos, jnp.int32)
+    has_attn = cfg.mixer in ("attn", "hymba")
+    has_ssm = cfg.mixer in ("mamba", "hymba")
+
+    def body(h, xs):
+        lp, kind, kc, vc, sconv, sh = xs
+        state = {"conv": sconv, "h": sh} if has_ssm else None
+        h, new_cache, new_state = layer_body(
+            h, lp, cfg, q_pos=q_pos, is_global=kind,
+            cache=(kc, vc) if has_attn else None,
+            cache_len=pos if has_attn else None,
+            ssm_state=state, compute_dtype=compute_dtype, shard=shard)
+        ys = {}
+        if has_attn:
+            ys["k"], ys["v"] = new_cache
+        if has_ssm:
+            ys["ssm_conv"] = new_state["conv"]
+            ys["ssm_h"] = new_state["h"]
+        return h, ys
+
+    n_self = cfg.n_self_layers if cfg.mixer != "mamba" else cfg.n_layers
+    dummy = jnp.zeros((n_self, 1))
+    xs_all = (params["layers"], _kinds(cfg),
+              cache.get("k", dummy), cache.get("v", dummy),
+              cache.get("ssm_conv", dummy), cache.get("ssm_h", dummy))
+
+    if cfg.n_cross_layers:
+        g = cfg.cross_attn_every
+        n_groups = cfg.n_cross_layers
+        self_groups = _split_groups(params["layers"], n_groups)
+        kind_groups = _kinds(cfg).reshape(n_groups, g - 1)
+        kc_g = _split_groups(cache["k"], n_groups)
+        vc_g = _split_groups(cache["v"], n_groups)
+        hd = cfg.head_dim_of
+
+        def group(h, xs):
+            self_lps, kinds_g, kcs, vcs, cross_lp, ck, cv = xs
+            h, ys = lax.scan(body, h, (self_lps, kinds_g, kcs, vcs,
+                                       jnp.zeros((g - 1, 1)),
+                                       jnp.zeros((g - 1, 1))))
+            # cross attention against cached encoder K/V
+            hq = rms_norm(h, cross_lp["ln1"], cfg.norm_eps)
+            q = jnp.einsum("bsd,dh->bsh", hq, cross_lp["wq"].astype(
+                compute_dtype)).reshape(b, 1, cfg.n_heads, hd)
+            kv_pos = jnp.broadcast_to(
+                jnp.arange(ck.shape[1], dtype=jnp.int32)[None],
+                (b, ck.shape[1]))
+            att = blockwise_attention(
+                q, ck, cv, q_pos=q_pos, kv_pos=kv_pos, causal=False,
+                softcap=cfg.attn_softcap, scale=cfg.attn_scale)
+            att = att.reshape(b, 1, cfg.n_heads * hd)
+            att = jnp.einsum("bsh,hd->bsd", att,
+                             cross_lp["wo"].astype(compute_dtype))
+            h = h + jnp.tanh(cross_lp["gate_attn"]).astype(h.dtype) \
+                * att.astype(h.dtype)
+            h2 = rms_norm(h, cross_lp["ln2"], cfg.norm_eps)
+            from .transformer import _mlp
+            h = h + jnp.tanh(cross_lp["gate_mlp"]).astype(h.dtype) * _mlp(
+                h2, cross_lp, cfg, compute_dtype).astype(h.dtype)
+            return h, ys
+
+        x, ys = lax.scan(group, x, (self_groups, kind_groups, kc_g, vc_g,
+                                    params["cross_layers"],
+                                    cache["cross_k"], cache["cross_v"]))
+        new_cache = dict(cache)
+        new_cache["k"] = ys["k"].reshape((-1,) + ys["k"].shape[2:])
+        new_cache["v"] = ys["v"].reshape((-1,) + ys["v"].shape[2:])
+    else:
+        x, ys = lax.scan(body, x, xs_all)
+        new_cache = dict(cache)
+        for key in ("k", "v", "ssm_conv", "ssm_h"):
+            if key in ys:
+                new_cache[key] = ys[key]
+
+    new_cache["len"] = cache["len"] + 1
+    logits = _unembed(params, cfg, x)[:, 0]
+    return logits, new_cache

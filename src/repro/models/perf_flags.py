@@ -1,0 +1,78 @@
+"""Performance-variant flags for the §Perf hillclimb.
+
+The baseline (paper-faithful substrate) runs with all defaults; each
+hillclimb iteration flips one flag, re-lowers, and re-derives the roofline
+terms (EXPERIMENTS.md §Perf records hypothesis -> change -> before/after).
+Flags are process-global so the dry-run CLI can set them without threading
+through every call site.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Optional
+
+
+@dataclass
+class PerfFlags:
+    # attention loop order: "kv_scan" = kv-chunk inner loop with full-S
+    # accumulator (baseline); "q_outer" = scan q-chunks, accumulator per
+    # q-tile (flash loop order — HBM-optimal)
+    attention_impl: str = "kv_scan"
+    attn_q_chunk: int = 512
+    attn_kv_chunk: int = 512
+    # SSM scan: "materialized" builds (B,S,D,N) da/dbx tensors (baseline);
+    # "streamed" expands them chunk-by-chunk inside the scan body
+    ssm_impl: str = "materialized"
+    ssm_chunk: int = 256
+    # dtype of the streamed associative-scan elements (da/dbx/h); bf16
+    # halves the dominant SSM HBM traffic (A stays f32 in the exponent)
+    ssm_state_dtype: str = "f32"
+    # RMSNorm intermediate dtype: "f32" materializes an f32 copy (baseline);
+    # "bf16" keeps elementwise math in bf16 with f32 variance accumulation
+    norm_dtype: str = "f32"
+    # cross-entropy: "full" materializes (B,S,V) f32 logsumexp (baseline);
+    # "chunked" streams sequence chunks through the unembed+CE
+    ce_impl: str = "full"
+    ce_chunk: int = 512
+    # MoE combine: "gather" reads the E-sharded expert output buffer via
+    # gather (baseline); "replicated" all-gathers the expert outputs once
+    # per layer and combines locally
+    moe_combine: str = "gather"
+    # MoE implementation: "pjit" (baseline, GSPMD-partitioned dispatch) or
+    # "shard_map" (explicitly local dispatch per model-rank, E_loc experts
+    # each, partial outputs psum'd over `model` — the production EP pattern)
+    moe_impl: str = "pjit"
+    # residual-stream sequence sharding (sequence parallelism): shard the
+    # (B, S, D) carry's S dim over `model` between layers
+    seq_shard: bool = False
+
+
+_FLAGS = PerfFlags()
+_MESH = None           # (mesh, batch_axes) registered by the launcher
+_MODEL_AXIS = "model"
+
+
+def get_flags() -> PerfFlags:
+    return _FLAGS
+
+
+def set_mesh(mesh, batch_axes) -> None:
+    global _MESH
+    _MESH = (mesh, tuple(batch_axes))
+
+
+def get_mesh():
+    return _MESH
+
+
+def set_flags(**kw) -> PerfFlags:
+    global _FLAGS
+    _FLAGS = replace(_FLAGS, **kw)
+    return _FLAGS
+
+
+def reset_flags() -> PerfFlags:
+    global _FLAGS
+    _FLAGS = PerfFlags()
+    return _FLAGS

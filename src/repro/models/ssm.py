@@ -1,0 +1,205 @@
+"""Mamba-1 selective state-space mixer (falcon-mamba / hymba SSM heads).
+
+Training/prefill runs a *chunked associative scan*: the diagonal recurrence
+h_t = a_t * h_{t-1} + b_t is telescoped with ``jax.lax.associative_scan``
+inside fixed-size time chunks, and the inter-chunk state is carried by a
+``lax.scan`` — memory is O(chunk * d_inner * d_state) instead of
+O(S * d_inner * d_state).  Decode is the O(1) single-step recurrence over a
+carried (h, conv window) state.  The Pallas kernel in
+repro.kernels.mamba_scan is the TPU-optimized inner loop; this module is the
+portable reference used by the dry-run.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import SSMConfig
+
+
+def _ssm_scan_chunked(a: jax.Array, bx: jax.Array, h0: jax.Array,
+                      chunk: int = 256) -> Tuple[jax.Array, jax.Array]:
+    """Diagonal linear recurrence h_t = a_t * h_{t-1} + bx_t.
+
+    a, bx: (B, S, D, N); h0: (B, D, N).  Returns (h_all (B,S,D,N), h_last).
+    """
+    b, s, dd, n = a.shape
+    chunk = min(chunk, s)
+    n_chunks = -(-s // chunk)
+    pad = n_chunks * chunk - s
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                    constant_values=1.0)
+        bx = jnp.pad(bx, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    ac = jnp.moveaxis(a.reshape(b, n_chunks, chunk, dd, n), 1, 0)
+    bc = jnp.moveaxis(bx.reshape(b, n_chunks, chunk, dd, n), 1, 0)
+
+    def combine(l, r):
+        (al, bl), (ar, br) = l, r
+        return al * ar, br + ar * bl
+
+    def body(h, xs):
+        a_c, b_c = xs                               # (B, chunk, D, N)
+        aa, bb = lax.associative_scan(combine, (a_c, b_c), axis=1)
+        h_all = aa * h[:, None] + bb                # prefix including carry
+        return h_all[:, -1], h_all
+
+    h_last, h_chunks = lax.scan(body, h0, (ac, bc))
+    h_all = jnp.moveaxis(h_chunks, 0, 1).reshape(b, n_chunks * chunk, dd, n)
+    return h_all[:, :s], h_last
+
+
+def _ssm_scan_sequential(dt, bmat, cmat, xi, a, h0):
+    """HBM-minimal recurrence: one sequential ``lax.scan`` over time, state
+    expanded per step, y contracted per step — nothing with an (S, D, N)
+    or even (chunk, D, N) extent ever reaches HBM.  This is the XLA-level
+    expression of kernels/mamba_scan.py's VMEM strategy; on real TPUs the
+    Pallas kernel replaces it (per-step loop overhead is not modeled by the
+    dry-run roofline — see EXPERIMENTS.md §Perf notes).
+
+    dt, xi: (B,S,di); bmat, cmat: (B,S,N); a: (di,N); h0: (B,di,N).
+    """
+    def step(h, xs):
+        dt_t, b_t, c_t, x_t = xs              # (B,di) (B,N) (B,N) (B,di)
+        da = jnp.exp(dt_t.astype(jnp.float32)[..., None] * a[None])
+        h = da * h + (dt_t * x_t).astype(jnp.float32)[..., None] \
+            * b_t.astype(jnp.float32)[:, None, :]
+        y_t = jnp.einsum("bdn,bn->bd", h, c_t.astype(jnp.float32))
+        return h, y_t
+
+    to_t = lambda x: jnp.swapaxes(x, 0, 1)    # (S, B, ...)
+    h_last, y = lax.scan(step, h0, (to_t(dt), to_t(bmat), to_t(cmat),
+                                    to_t(xi)))
+    return jnp.swapaxes(y, 0, 1), h_last      # (B,S,di)
+
+
+def _ssm_scan_streamed(dt, bmat, cmat, xi, a, h0, chunk: int = 256,
+                       state_dtype=jnp.float32):
+    """Streamed recurrence: the (B,S,D,N) discretized tensors are expanded
+    chunk-by-chunk INSIDE the scan body and y is contracted immediately —
+    nothing with an (S, D, N) extent ever reaches HBM (§Perf hillclimb;
+    the XLA-level analogue of kernels/mamba_scan.py).
+
+    dt, xi: (B,S,di); bmat, cmat: (B,S,N); a: (di,N); h0: (B,di,N).
+    Returns y (B,S,di) f32, h_last.
+    """
+    b, s, di = dt.shape
+    n = a.shape[-1]
+    chunk = min(chunk, s)
+    n_chunks = -(-s // chunk)
+    pad = n_chunks * chunk - s
+
+    def pad_t(x):
+        return jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+
+    def chunks(x):
+        x = pad_t(x)
+        return jnp.moveaxis(
+            x.reshape((b, n_chunks, chunk) + x.shape[2:]), 1, 0)
+
+    def combine(l, r):
+        (al, bl), (ar, br) = l, r
+        return al * ar, br + ar * bl
+
+    def body(h, xs):
+        dt_c, b_c, c_c, x_c = xs                 # (B,c,di) (B,c,N) x2 (B,c,di)
+        da = jnp.exp(dt_c.astype(jnp.float32)[..., None]
+                     * a[None, None]).astype(state_dtype)
+        dbx = ((dt_c * x_c).astype(jnp.float32)[..., None]
+               * b_c.astype(jnp.float32)[:, :, None, :]
+               ).astype(state_dtype)                          # (B,c,di,N)
+        aa, bb = lax.associative_scan(combine, (da, dbx), axis=1)
+        h_all = aa.astype(jnp.float32) * h[:, None] \
+            + bb.astype(jnp.float32)
+        y_c = jnp.einsum("bsdn,bsn->bsd", h_all,
+                         c_c.astype(jnp.float32))
+        return h_all[:, -1], y_c
+
+    h_last, y_chunks = lax.scan(
+        jax.checkpoint(body), h0,
+        (chunks(dt), chunks(bmat), chunks(cmat), chunks(xi)))
+    y = jnp.moveaxis(y_chunks, 0, 1).reshape(b, n_chunks * chunk, di)
+    return y[:, :s], h_last
+
+
+def mamba_mixer(x: jax.Array, params: Dict[str, jax.Array], ssm: SSMConfig,
+                *, state: Optional[Dict[str, jax.Array]] = None,
+                return_state: bool = False):
+    """Mamba-1 block.  x: (B, S, d_model).
+
+    params: in_proj (d, 2*di), conv_w (K, di), conv_b (di), x_proj
+    (di, dt_rank+2N), dt_proj (dt_rank, di), dt_bias (di), A_log (di, N),
+    D (di), out_proj (di, d).
+    state (decode): {"conv": (B, K-1, di), "h": (B, di, N)}.
+    """
+    b, s, d = x.shape
+    di = params["conv_w"].shape[1]
+    n = ssm.d_state
+    kw = params["conv_w"].shape[0]
+
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    xi, z = jnp.split(xz, 2, axis=-1)               # (B,S,di) each
+
+    # depthwise causal conv over time ------------------------------------
+    if state is not None:
+        prev = state["conv"]                        # (B, K-1, di)
+        xi_pad = jnp.concatenate([prev, xi], axis=1)
+        new_conv = xi_pad[:, -(kw - 1):] if kw > 1 else prev
+    else:
+        xi_pad = jnp.pad(xi, ((0, 0), (kw - 1, 0), (0, 0)))
+        new_conv = xi_pad[:, -(kw - 1):] if kw > 1 else None
+    conv = sum(xi_pad[:, i:i + s] * params["conv_w"][i][None, None]
+               for i in range(kw))
+    xi = jax.nn.silu(conv + params["conv_b"][None, None])
+
+    # input-dependent SSM parameters ------------------------------------------
+    proj = jnp.einsum("bsd,de->bse", xi, params["x_proj"])
+    dt_rank = ssm.dt_rank_of(d)
+    dt, bmat, cmat = jnp.split(proj, [dt_rank, dt_rank + n], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("bsr,rd->bsd", dt, params["dt_proj"])
+                         + params["dt_bias"][None, None])      # (B,S,di)
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))          # (di, N)
+
+    h0 = state["h"] if state is not None else jnp.zeros((b, di, n),
+                                                        jnp.float32)
+    if s == 1:                                     # decode fast path
+        da = jnp.exp(dt.astype(jnp.float32)[..., None] * a[None, None])
+        dbx = (dt * xi).astype(jnp.float32)[..., None] \
+            * bmat.astype(jnp.float32)[:, :, None, :]
+        h_last = da[:, 0] * h0 + dbx[:, 0]
+        y = jnp.einsum("bdn,bn->bd", h_last,
+                       cmat[:, 0].astype(jnp.float32))[:, None]
+    else:
+        from .perf_flags import get_flags
+        flags = get_flags()
+        if flags.ssm_impl == "sequential":
+            y, h_last = _ssm_scan_sequential(dt, bmat, cmat, xi, a, h0)
+        elif flags.ssm_impl == "streamed":
+            sdt = jnp.bfloat16 if flags.ssm_state_dtype == "bf16" \
+                else jnp.float32
+            y, h_last = _ssm_scan_streamed(
+                dt, bmat, cmat, xi, a, h0, chunk=flags.ssm_chunk,
+                state_dtype=sdt)
+        else:
+            # baseline: (B,S,di,N) discretized tensors fully materialized
+            da = jnp.exp(dt.astype(jnp.float32)[..., None] * a[None, None])
+            dbx = (dt * xi).astype(jnp.float32)[..., None] \
+                * bmat.astype(jnp.float32)[:, :, None, :]      # (B,S,di,N)
+            h_all, h_last = _ssm_scan_chunked(da, dbx, h0,
+                                              chunk=flags.ssm_chunk)
+            y = jnp.einsum("bsdn,bsn->bsd", h_all,
+                           cmat.astype(jnp.float32))          # (B,S,di)
+    y = y + xi.astype(jnp.float32) * params["D"][None, None]
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = jnp.einsum("bsd,de->bse", y.astype(x.dtype), params["out_proj"])
+
+    if return_state:
+        new_state = {"conv": new_conv if new_conv is not None else
+                     jnp.zeros((b, max(kw - 1, 1), di), x.dtype),
+                     "h": h_last}
+        return out, new_state
+    return out

@@ -1,0 +1,341 @@
+"""Unified decoder LM covering all assigned architectures.
+
+One parameter pytree + one forward implementation, specialized by
+:class:`repro.models.config.ArchConfig`:
+
+* mixer = attn (GQA + RoPE, optional sliding-window/global alternation,
+  logit softcap, QK-norm), mamba (attn-free), or hymba (parallel attn+SSM
+  heads averaged);
+* MLP = SwiGLU / GELU / GEGLU, or MoE (sort-based capacity dispatch, EP);
+* optional cross-attention layers every N layers (VLM backbone) fed by a
+  stub encoder sequence; optional embeddings-input mode (audio backbone);
+* layers run under ``lax.scan`` over stacked parameters with per-layer
+  local/global flags, each layer body wrapped in ``jax.checkpoint`` (remat);
+* three entry points: ``forward`` (teacher-forced logits), ``prefill``
+  (returns KV/SSM caches), ``decode_step`` (one token, updates caches).
+
+Sharding is injected via an optional ``shard`` callback dict so the same
+code runs unsharded on CPU smoke tests and fully sharded under the
+production mesh (see repro/sharding/specs.py).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ArchConfig
+from .layers import (apply_rope, blockwise_attention, mlp_gelu, mlp_geglu,
+                     mlp_swiglu, rms_norm, rope_tables, soft_cap)
+from .moe import moe_mlp
+from .ssm import mamba_mixer
+
+Params = Dict[str, Any]
+ShardFn = Callable[[jax.Array, str], jax.Array]
+
+
+def _noshard(x: jax.Array, name: str) -> jax.Array:
+    return x
+
+
+# ---------------------------------------------------------------------------
+# parameter construction
+# ---------------------------------------------------------------------------
+
+def _attn_shapes(cfg: ArchConfig) -> Dict[str, Tuple[int, ...]]:
+    d, hd = cfg.d_model, cfg.head_dim_of
+    shapes = {
+        "wq": (d, cfg.n_heads * hd),
+        "wk": (d, cfg.n_kv * hd),
+        "wv": (d, cfg.n_kv * hd),
+        "wo": (cfg.n_heads * hd, d),
+    }
+    if cfg.qk_norm:
+        shapes["q_norm"] = (hd,)
+        shapes["k_norm"] = (hd,)
+    return shapes
+
+
+def _mlp_shapes(cfg: ArchConfig) -> Dict[str, Tuple[int, ...]]:
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.mlp == "gelu":
+        return {"wi": (d, f), "wom": (f, d)}
+    return {"wg": (d, f), "wu": (d, f), "wd": (f, d)}
+
+
+def _moe_shapes(cfg: ArchConfig) -> Dict[str, Tuple[int, ...]]:
+    moe = cfg.moe
+    d = cfg.d_model
+    e = moe.n_experts_padded
+    shapes = {
+        "w_router": (d, e),
+        "wg": (e, d, moe.d_expert),
+        "wu": (e, d, moe.d_expert),
+        "wd": (e, moe.d_expert, d),
+    }
+    if moe.n_shared:
+        shapes.update({
+            "sg": (d, moe.d_shared), "su": (d, moe.d_shared),
+            "sd": (moe.d_shared, d), "shared_gate": (d,),
+        })
+    return shapes
+
+
+def _ssm_shapes(cfg: ArchConfig) -> Dict[str, Tuple[int, ...]]:
+    ssm = cfg.ssm
+    d = cfg.d_model
+    di = ssm.expand * d
+    r = ssm.dt_rank_of(d)
+    n = ssm.d_state
+    return {
+        "in_proj": (d, 2 * di),
+        "conv_w": (ssm.d_conv, di),
+        "conv_b": (di,),
+        "x_proj": (di, r + 2 * n),
+        "dt_proj": (r, di),
+        "dt_bias": (di,),
+        "A_log": (di, n),
+        "D": (di,),
+        "out_proj": (di, d),
+    }
+
+
+def layer_shapes(cfg: ArchConfig) -> Dict[str, Tuple[int, ...]]:
+    """Per-layer parameter shapes (without the stacked L dim)."""
+    shapes: Dict[str, Tuple[int, ...]] = {"ln1": (cfg.d_model,)}
+    if cfg.mixer in ("attn", "hymba"):
+        shapes.update(_attn_shapes(cfg))
+    if cfg.mixer in ("mamba", "hymba"):
+        shapes.update({f"ssm_{k}": v for k, v in _ssm_shapes(cfg).items()})
+    if cfg.moe is not None:
+        shapes["ln2"] = (cfg.d_model,)
+        shapes.update(_moe_shapes(cfg))
+    elif cfg.d_ff:
+        shapes["ln2"] = (cfg.d_model,)
+        shapes.update(_mlp_shapes(cfg))
+    return shapes
+
+
+def cross_layer_shapes(cfg: ArchConfig) -> Dict[str, Tuple[int, ...]]:
+    shapes = {"ln1": (cfg.d_model,), "ln2": (cfg.d_model,),
+              "gate_attn": (), "gate_mlp": ()}
+    shapes.update(_attn_shapes(cfg))
+    shapes.update(_mlp_shapes(cfg))
+    return shapes
+
+
+def param_shapes(cfg: ArchConfig, dtype=jnp.float32) -> Params:
+    """ShapeDtypeStruct pytree — used by the dry-run (no allocation)."""
+    def leaf(shape):
+        return jax.ShapeDtypeStruct(shape, dtype)
+
+    n_self = cfg.n_self_layers if cfg.mixer != "mamba" else cfg.n_layers
+    p: Params = {
+        "embed": leaf((cfg.vocab, cfg.d_model)),
+        "final_norm": leaf((cfg.d_model,)),
+        "layers": {k: leaf((n_self,) + s)
+                   for k, s in layer_shapes(cfg).items()},
+    }
+    if cfg.n_cross_layers:
+        p["cross_layers"] = {k: leaf((cfg.n_cross_layers,) + s)
+                             for k, s in cross_layer_shapes(cfg).items()}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = leaf((cfg.d_model, cfg.vocab))
+    return p
+
+
+def init_params(cfg: ArchConfig, key: jax.Array, dtype=jnp.float32) -> Params:
+    """Random init (smoke tests / examples; full configs are dry-run only)."""
+    shapes = param_shapes(cfg, dtype)
+    flat, tree = jax.tree_util.tree_flatten_with_path(shapes)
+    leaves = []
+    for path, sds in flat:
+        key, sub = jax.random.split(key)
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        shape = sds.shape
+        if name.startswith("ln") or name in ("final_norm", "conv_b", "D",
+                                             "dt_bias", "q_norm", "k_norm"):
+            leaf = jnp.ones(shape, dtype) if name in ("final_norm", "D") \
+                else jnp.ones(shape, dtype)
+        elif name.endswith("A_log") or name == "ssm_A_log":
+            n = shape[-1]
+            leaf = jnp.log(jnp.broadcast_to(
+                jnp.arange(1, n + 1, dtype=jnp.float32), shape)).astype(dtype)
+        elif name.startswith("gate"):
+            leaf = jnp.zeros(shape, dtype)
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            leaf = (jax.random.normal(sub, shape, jnp.float32)
+                    * (1.0 / math.sqrt(max(1, fan_in)))).astype(dtype)
+        leaves.append(leaf)
+    return jax.tree_util.tree_unflatten(tree, leaves)
+
+
+# ---------------------------------------------------------------------------
+# layer bodies
+# ---------------------------------------------------------------------------
+
+def _attention(x, lp, cfg: ArchConfig, *, q_pos, kv_pos, is_global,
+               kv_override=None, cache=None, cache_len=None,
+               compute_dtype=jnp.bfloat16, shard: ShardFn = _noshard):
+    """Self/cross attention.  Returns (out, (k, v) used)."""
+    b, s, d = x.shape
+    hd = cfg.head_dim_of
+    hq, hkv = cfg.n_heads, cfg.n_kv
+    xq = jnp.einsum("bsd,dh->bsh", x, lp["wq"].astype(compute_dtype))
+    q = xq.reshape(b, s, hq, hd)
+    if kv_override is not None:
+        src = kv_override
+        src_pos = jnp.broadcast_to(
+            jnp.arange(src.shape[1], dtype=jnp.int32)[None], src.shape[:2])
+        causal = False
+    else:
+        src = x
+        src_pos = q_pos
+        causal = True
+    k = jnp.einsum("bsd,dh->bsh", src,
+                   lp["wk"].astype(compute_dtype)).reshape(b, -1, hkv, hd)
+    v = jnp.einsum("bsd,dh->bsh", src,
+                   lp["wv"].astype(compute_dtype)).reshape(b, -1, hkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, lp["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, lp["k_norm"], cfg.norm_eps)
+    if kv_override is None:                         # RoPE on self-attn only
+        cos_q, sin_q = rope_tables(q_pos, hd, cfg.rope_theta)
+        cos_k, sin_k = rope_tables(src_pos, hd, cfg.rope_theta)
+        q = apply_rope(q, cos_q, sin_q)
+        k = apply_rope(k, cos_k, sin_k)
+
+    kv_pos_eff = src_pos
+    if cache is not None:                            # decode: append to cache
+        k_cache, v_cache = cache                     # (B, Smax, Hkv, hd)
+        k_cache = lax.dynamic_update_slice(
+            k_cache, k.astype(k_cache.dtype), (0, cache_len, 0, 0))
+        v_cache = lax.dynamic_update_slice(
+            v_cache, v.astype(v_cache.dtype), (0, cache_len, 0, 0))
+        k, v = k_cache, v_cache
+        smax = k_cache.shape[1]
+        pos = jnp.arange(smax, dtype=jnp.int32)[None]
+        kv_pos_eff = jnp.broadcast_to(
+            jnp.where(pos <= cache_len + s - 1, pos, jnp.int32(2 ** 30)),
+            (b, smax))
+        cache = (k_cache, v_cache)
+
+    # per-layer local/global: traced is_global becomes a traced window size
+    # (2**30 = effectively unmasked) so ONE blockwise pass serves both.
+    if cfg.window:
+        if isinstance(is_global, (bool, int)):
+            win = None if is_global else cfg.window
+        else:
+            win = jnp.where(is_global, jnp.int32(2 ** 30),
+                            jnp.int32(cfg.window))
+    else:
+        win = None
+    from .perf_flags import get_flags
+    flags = get_flags()
+    if flags.attention_impl == "q_outer" and s > flags.attn_q_chunk:
+        from .layers import blockwise_attention_qouter
+        out = blockwise_attention_qouter(
+            q, k, v, q_pos=q_pos, kv_pos=kv_pos_eff, causal=causal,
+            window=win, softcap=cfg.attn_softcap, scale=cfg.attn_scale,
+            q_chunk=flags.attn_q_chunk, kv_chunk=flags.attn_kv_chunk)
+    else:
+        out = blockwise_attention(q, k, v, q_pos=q_pos, kv_pos=kv_pos_eff,
+                                  causal=causal, window=win,
+                                  softcap=cfg.attn_softcap,
+                                  scale=cfg.attn_scale,
+                                  chunk=flags.attn_kv_chunk)
+    out = out.reshape(b, s, hq * hd)
+    out = jnp.einsum("bsh,hd->bsd", out, lp["wo"].astype(compute_dtype))
+    return out, cache
+
+
+def _mlp(x, lp, cfg: ArchConfig, compute_dtype=jnp.bfloat16,
+         shard: ShardFn = _noshard):
+    if cfg.moe is not None:
+        mp = {k: lp[k].astype(compute_dtype)
+              for k in _moe_shapes(cfg) if k in lp}
+        from .perf_flags import get_flags, get_mesh
+        if get_flags().moe_impl == "shard_map" and get_mesh() is not None:
+            from .moe import moe_mlp_shardmap
+            mesh, bp_axes = get_mesh()
+            return moe_mlp_shardmap(x, mp, cfg.moe, mesh, bp_axes)
+        return moe_mlp(x, mp, cfg.moe, shard=shard)
+    if not cfg.d_ff:
+        return jnp.zeros_like(x)
+    if cfg.mlp == "gelu":
+        return mlp_gelu(x, lp["wi"].astype(compute_dtype),
+                        lp["wom"].astype(compute_dtype))
+    if cfg.mlp == "geglu":
+        return mlp_geglu(x, lp["wg"].astype(compute_dtype),
+                         lp["wu"].astype(compute_dtype),
+                         lp["wd"].astype(compute_dtype))
+    return mlp_swiglu(x, lp["wg"].astype(compute_dtype),
+                      lp["wu"].astype(compute_dtype),
+                      lp["wd"].astype(compute_dtype))
+
+
+def _ssm_params(lp):
+    return {k[len("ssm_"):]: v for k, v in lp.items()
+            if k.startswith("ssm_")}
+
+
+def layer_body(x, lp, cfg: ArchConfig, *, q_pos, is_global,
+               cache=None, cache_len=None, ssm_state=None,
+               compute_dtype=jnp.bfloat16, shard: ShardFn = _noshard):
+    """One decoder layer.  Returns (x, new_cache, new_ssm_state)."""
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    new_cache = None
+    new_state = None
+    if cfg.mixer == "attn":
+        mix, new_cache = _attention(
+            h, lp, cfg, q_pos=q_pos, kv_pos=q_pos, is_global=is_global,
+            cache=cache, cache_len=cache_len, compute_dtype=compute_dtype,
+            shard=shard)
+    elif cfg.mixer == "mamba":
+        sp = {k: v.astype(compute_dtype) if v.dtype == jnp.float32 and
+              k not in ("A_log", "D") else v for k, v in _ssm_params(lp).items()}
+        if ssm_state is not None:
+            mix, new_state = mamba_mixer(h, sp, cfg.ssm, state=ssm_state,
+                                         return_state=True)
+        else:
+            mix = mamba_mixer(h, sp, cfg.ssm)
+    else:                                            # hymba: parallel heads
+        attn_out, new_cache = _attention(
+            h, lp, cfg, q_pos=q_pos, kv_pos=q_pos, is_global=is_global,
+            cache=cache, cache_len=cache_len, compute_dtype=compute_dtype,
+            shard=shard)
+        sp = _ssm_params(lp)
+        if ssm_state is not None:
+            ssm_out, new_state = mamba_mixer(h, sp, cfg.ssm, state=ssm_state,
+                                             return_state=True)
+        else:
+            ssm_out = mamba_mixer(h, sp, cfg.ssm)
+        mix = 0.5 * (attn_out + ssm_out)
+    x = x + mix.astype(x.dtype)
+    x = shard(x, "hidden")
+
+    if "ln2" in lp:                                 # attn-free mamba: no MLP
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + _mlp(h2, lp, cfg, compute_dtype, shard).astype(x.dtype)
+        x = shard(x, "hidden")
+    return x, new_cache, new_state
+
+
+def cross_layer_body(x, lp, cfg: ArchConfig, enc, *, q_pos,
+                     compute_dtype=jnp.bfloat16, shard: ShardFn = _noshard):
+    """Gated cross-attention layer (llama-3.2-vision style)."""
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    attn, _ = _attention(h, lp, cfg, q_pos=q_pos, kv_pos=None,
+                         is_global=True, kv_override=enc,
+                         compute_dtype=compute_dtype, shard=shard)
+    x = x + jnp.tanh(lp["gate_attn"]).astype(x.dtype) * attn.astype(x.dtype)
+    h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    x = x + jnp.tanh(lp["gate_mlp"]).astype(x.dtype) * _mlp(
+        h2, lp, cfg, compute_dtype).astype(x.dtype)
+    return shard(x, "hidden")

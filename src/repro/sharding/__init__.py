@@ -1,0 +1,7 @@
+"""Distribution layer: sharding rules, gradient compression, pipelining."""
+
+from .specs import (activation_shard_fn, batch_axes, batch_pspecs,
+                    cache_pspecs, param_pspecs, to_named)
+
+__all__ = ["activation_shard_fn", "batch_axes", "batch_pspecs",
+           "cache_pspecs", "param_pspecs", "to_named"]

@@ -1,0 +1,199 @@
+"""Sharding rules: parameter / batch / cache PartitionSpecs.
+
+Mesh axes (see launch/mesh.py): single-pod ``("data", "model")`` = (16, 16);
+multi-pod ``("pod", "data", "model")`` = (2, 16, 16).  ``pod`` acts as an
+extra data-parallel axis by default (PP over pod is the optional
+sharding/pipeline.py strategy).
+
+Policy (Megatron-style TP16 x DP16(x2)):
+* attention qkv/out projections and MLP in/out: column/row-sharded over
+  ``model`` — dims are guarded for divisibility by 16; non-divisible dims
+  (e.g. hymba's 32001 vocab) stay replicated;
+* MoE expert stacks: expert dim over ``model`` (expert parallelism);
+* SSM: d_inner over ``model``;
+* embeddings: vocab over ``model``; lm_head column-sharded;
+* batch dims over ``(pod,) data``;
+* decode KV caches: batch over data; kv-heads over ``model`` when divisible,
+  otherwise the cache *sequence* dim goes over ``model`` (attention then
+  psum-reduces over sequence shards);
+* long-context (batch=1): cache sequence over data (+model if kv heads
+  don't shard) — context parallelism.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..models.config import ArchConfig
+from ..models.transformer import param_shapes
+
+MODEL_AXIS = "model"
+
+
+def batch_axes(multi_pod: bool) -> Tuple[str, ...]:
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def _div(n: int, by: int) -> bool:
+    return n % by == 0
+
+
+def _model_if(n: int, axis_size: int = 16) -> Optional[str]:
+    return MODEL_AXIS if _div(n, axis_size) else None
+
+
+# per-key rules applied to the trailing dims (leading stacked dims -> None)
+def _rule(key: str, shape: Tuple[int, ...], cfg: ArchConfig,
+          axis_size: int) -> Tuple[Optional[Any], ...]:
+    nd = len(shape)
+    m = lambda n: _model_if(n, axis_size)
+    if key == "embed":
+        return (m(shape[0]), None)
+    if key == "lm_head":
+        return (None, m(shape[1]))
+    if key == "final_norm":
+        return (None,)
+    if key in ("wq", "wk", "wv"):
+        return (None, m(shape[-1]))
+    if key == "wo":
+        return (m(shape[-2]), None)
+    if key in ("wg", "wu"):
+        if nd == 3:                      # (E, D, Fe): expert parallel
+            return (m(shape[0]), None, None)
+        return (None, m(shape[-1]))
+    if key == "wd":
+        if nd == 3:
+            return (m(shape[0]), None, None)
+        return (m(shape[-2]), None)
+    if key == "wi" or key in ("sg", "su"):
+        return (None, m(shape[-1]))
+    if key in ("wom", "sd"):
+        return (m(shape[-2]), None)
+    if key == "w_router":
+        return (None, None)
+    if key.startswith("ssm_"):
+        sub = key[len("ssm_"):]
+        if sub == "in_proj":
+            return (None, m(shape[-1]))
+        if sub == "conv_w":
+            return (None, m(shape[-1]))
+        if sub in ("conv_b", "dt_bias", "D"):
+            return (m(shape[-1]),)
+        if sub in ("x_proj", "A_log", "out_proj"):
+            return (m(shape[-2]), None)
+        if sub == "dt_proj":
+            return (None, m(shape[-1]))
+    # norms, gates, anything else: replicated
+    return tuple(None for _ in range(nd))
+
+
+def param_pspecs(cfg: ArchConfig, *, axis_size: int = 16) -> Any:
+    """PartitionSpec pytree mirroring param_shapes(cfg)."""
+    shapes = param_shapes(cfg)
+
+    def walk(tree, stacked: int):
+        out = {}
+        for key, val in tree.items():
+            if isinstance(val, dict):
+                out[key] = walk(val, stacked)
+            else:
+                shape = val.shape
+                trailing = _rule(key, shape[stacked:], cfg, axis_size)
+                out[key] = P(*((None,) * stacked + tuple(trailing)))
+        return out
+
+    specs: Dict[str, Any] = {}
+    for key, val in shapes.items():
+        if key in ("layers", "cross_layers"):
+            specs[key] = walk(val, stacked=1)
+        elif isinstance(val, dict):
+            specs[key] = walk(val, stacked=0)
+        else:
+            specs[key] = P(*_rule(key, val.shape, cfg, axis_size))
+    return specs
+
+
+def batch_pspecs(cfg: ArchConfig, *, multi_pod: bool, batch: int) -> Any:
+    bp = batch_axes(multi_pod)
+    bsize = 16 * (2 if multi_pod else 1)
+    baxis = bp if _div(batch, bsize) else (bp[-1] if _div(batch, 16) else None)
+    specs = {"inputs": P(baxis, None, None) if cfg.input_mode == "embeddings"
+             else P(baxis, None),
+             "targets": P(baxis, None)}
+    if cfg.n_cross_layers:
+        specs["enc"] = P(baxis, None, None)
+    return specs
+
+
+def cache_pspecs(cfg: ArchConfig, *, multi_pod: bool, batch: int,
+                 axis_size: int = 16) -> Dict[str, Any]:
+    bp = batch_axes(multi_pod)
+    dp_size = 16 * (2 if multi_pod else 1)
+    if _div(batch, dp_size):
+        baxis: Any = bp
+    elif _div(batch, 16):
+        baxis = bp[-1]
+    else:
+        baxis = None
+    kv_sharded = cfg.n_kv and _div(cfg.n_kv, axis_size)
+    specs: Dict[str, Any] = {"len": P()}
+    if cfg.mixer in ("attn", "hymba"):
+        if baxis is not None:
+            seq_ax = None if kv_sharded else MODEL_AXIS
+            head_ax = MODEL_AXIS if kv_sharded else None
+            specs["k"] = P(None, baxis, seq_ax, head_ax, None)
+        else:
+            # long-context, batch 1: context parallelism over data(+pod)
+            head_ax = MODEL_AXIS if kv_sharded else None
+            specs["k"] = P(None, None, bp, head_ax, None)
+        specs["v"] = specs["k"]
+    if cfg.mixer in ("mamba", "hymba"):
+        di = cfg.ssm.expand * cfg.d_model
+        di_ax = _model_if(di, axis_size)
+        specs["ssm_conv"] = P(None, baxis, None, di_ax)
+        specs["ssm_h"] = P(None, baxis, di_ax, None)
+    if cfg.n_cross_layers:
+        head_ax = MODEL_AXIS if kv_sharded else None
+        specs["cross_k"] = P(None, baxis, None, head_ax, None)
+        specs["cross_v"] = specs["cross_k"]
+    return specs
+
+
+def activation_shard_fn(mesh: Mesh, cfg: ArchConfig, *, multi_pod: bool):
+    """The `shard` callback threaded through the model code."""
+    bp = batch_axes(multi_pod)
+    vocab_ax = _model_if(cfg.vocab)
+    from ..models.perf_flags import get_flags
+    seq_ax = MODEL_AXIS if get_flags().seq_shard else None
+    table = {
+        "hidden": P(bp, seq_ax, None),
+        "logits": P(bp, None, vocab_ax),
+        # MoE buffers (B, E, C, d|f).  The scatter-built dispatch buffer
+        # stays expert-REPLICATED across `model` (dispatch combinatorics are
+        # cheap and redundant per model-rank; scattering into an E-sharded
+        # buffer makes GSPMD all-reduce the whole global buffer).  Only the
+        # expert-einsum intermediates are E-sharded (weights-stationary EP).
+        "moe_buf": P(bp, None, None, None),
+        "moe_h": P(bp, MODEL_AXIS, None, None),
+    }
+
+    def shard(x, name):
+        spec = table.get(name)
+        if spec is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, spec))
+
+    return shard
+
+
+def to_named(mesh: Mesh, tree: Any) -> Any:
+    """PartitionSpec pytree -> NamedSharding pytree."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree, is_leaf=lambda s: isinstance(s, P))

@@ -1,0 +1,160 @@
+"""Step builders: train_step / prefill_step / decode-serve_step.
+
+These close over the (static) ArchConfig + optimizer config + optional
+sharding callbacks and return pure functions suitable for ``jax.jit`` with
+explicit in/out shardings — the objects the multi-pod dry-run lowers.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..models.config import ArchConfig
+from ..models.model import decode_step as model_decode
+from ..models.model import forward, prefill
+from ..models.transformer import _noshard
+from .optimizer import AdamWConfig, OptState, adamw_update
+
+
+def lm_loss(params, cfg: ArchConfig, batch: Dict[str, jax.Array],
+            *, compute_dtype=jnp.bfloat16, shard=_noshard,
+            z_loss: float = 1e-4) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Next-token cross entropy (+ z-loss) over a batch.
+
+    batch: {"inputs": (B,S) int32 or (B,S,D) float, "targets": (B,S) int32,
+            optional "enc": (B,E,D)}.
+
+    With perf flag ce_impl="chunked" the unembed + CE streams over sequence
+    chunks under jax.checkpoint, so the (B, S, V) f32 logits tensor never
+    materializes (§Perf hillclimb).
+    """
+    from ..models.perf_flags import get_flags
+    flags = get_flags()
+    if flags.ce_impl == "chunked":
+        from ..models.model import _unembed
+        x = forward(params, cfg, batch["inputs"], enc=batch.get("enc"),
+                    compute_dtype=compute_dtype, shard=shard,
+                    return_hidden=True)
+        b, s, d = x.shape
+        c = min(flags.ce_chunk, s - 1)
+        n_chunks = -(-(s - 1) // c)
+        pad = n_chunks * c - (s - 1)
+        xp = jnp.pad(x[:, :-1], ((0, 0), (0, pad), (0, 0)))
+        yp = jnp.pad(batch["targets"][:, 1:], ((0, 0), (0, pad)))
+        wp = jnp.pad(jnp.ones((b, s - 1), jnp.float32),
+                     ((0, 0), (0, pad)))
+        xs = xp.reshape(b, n_chunks, c, d).swapaxes(0, 1)
+        ys = yp.reshape(b, n_chunks, c).swapaxes(0, 1)
+        ws = wp.reshape(b, n_chunks, c).swapaxes(0, 1)
+
+        def chunk_ce(carry, xs_c):
+            x_c, y_c, w_c = xs_c
+            lg = _unembed(params, cfg, x_c).astype(jnp.float32)
+            logz = jax.nn.logsumexp(lg, axis=-1)
+            ll = jnp.take_along_axis(lg, y_c[..., None], axis=-1)[..., 0]
+            ce_sum, z_sum = carry
+            return (ce_sum + jnp.sum((logz - ll) * w_c),
+                    z_sum + jnp.sum(jnp.square(logz) * w_c)), None
+
+        (ce_sum, z_sum), _ = lax.scan(
+            jax.checkpoint(chunk_ce), (jnp.float32(0), jnp.float32(0)),
+            (xs, ys, ws))
+        denom = b * (s - 1)
+        ce = ce_sum / denom
+        loss = ce + z_loss * z_sum / denom
+        return loss, {"loss": ce}
+
+    logits = forward(params, cfg, batch["inputs"], enc=batch.get("enc"),
+                     compute_dtype=compute_dtype, shard=shard)
+    lg = logits[:, :-1].astype(jnp.float32)
+    labels = batch["targets"][:, 1:]
+    logz = jax.nn.logsumexp(lg, axis=-1)
+    ll = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    ce = jnp.mean(logz - ll)
+    loss = ce + z_loss * jnp.mean(jnp.square(logz))
+    return loss, {"loss": ce}
+
+
+def build_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig,
+                     *, microbatches: int = 1,
+                     compute_dtype=jnp.bfloat16,
+                     shard=_noshard,
+                     grad_transform: Optional[Callable] = None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    microbatches > 1 accumulates gradients over equal batch slices via
+    ``lax.scan`` (sequential, memory-bounded).  `grad_transform` hooks in
+    gradient compression (sharding/compression.py).
+    """
+
+    def loss_fn(params, mb):
+        return lm_loss(params, cfg, mb, compute_dtype=compute_dtype,
+                       shard=shard)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state: OptState, batch):
+        if microbatches == 1:
+            (loss, aux), grads = grad_fn(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape((microbatches, b // microbatches)
+                                 + x.shape[1:])
+            mbs = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (grads, loss), _ = lax.scan(acc_body, (g0, jnp.float32(0)), mbs)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+            aux = {"loss": loss}
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        params, opt_state, metrics = adamw_update(params, grads, opt_state,
+                                                  opt_cfg)
+        metrics.update(aux)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def build_prefill_step(cfg: ArchConfig, *, smax: int,
+                       compute_dtype=jnp.bfloat16, shard=_noshard):
+    """Inference-prefill: logits for the last position + filled caches."""
+
+    def prefill_step(params, batch):
+        return prefill(params, cfg, batch["inputs"], smax=smax,
+                       enc=batch.get("enc"), compute_dtype=compute_dtype,
+                       shard=shard)
+
+    return prefill_step
+
+
+def build_decode_step(cfg: ArchConfig, *, compute_dtype=jnp.bfloat16,
+                      shard=_noshard, greedy: bool = True):
+    """Serving decode: one new token for every sequence in the batch."""
+
+    def serve_step(params, token, cache):
+        logits, cache = model_decode(params, cfg, token, cache,
+                                     compute_dtype=compute_dtype,
+                                     shard=shard)
+        if cfg.input_mode == "embeddings":
+            # audio backbone: the frontend consumes logits; return argmax id
+            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, logits, cache
+
+    return serve_step

@@ -1,0 +1,65 @@
+"""Cost model: the quantities behind Figs. 8/10/11 and Table I."""
+
+import numpy as np
+import pytest
+
+from repro.core import baseline_datapath, evaluate_mapping, map_application
+from repro.core.costmodel import vector_mac_asic_energy_per_op_pj
+from repro.core.merge import add_pattern
+from repro.core.pe import Datapath
+from repro.graphir import pattern_from_spec, trace_scalar
+
+
+def test_baseline_pe_area_plausible():
+    """A 16-bit Garnet-class PE core is ~1e3 um^2 at 16 nm."""
+    dp = baseline_datapath()
+    assert 500 < dp.area_um2() < 3000
+    assert 1.0 < dp.fmax_ghz() < 3.0
+
+
+def test_energy_grows_with_active_units():
+    dp = Datapath()
+    cfg1 = add_pattern(dp, pattern_from_spec([("add", (-1, -1))]), "a")
+    cfg2 = add_pattern(dp, pattern_from_spec(
+        [("mul", (-1, -1)), ("add", (0, -1))]), "ma")
+    assert dp.config_energy_pj(cfg2) > dp.config_energy_pj(cfg1)
+
+
+def test_idle_units_cost_energy():
+    dp = baseline_datapath()
+    cfg = dp.configs["op:add"]
+    e_full = dp.config_energy_pj(cfg, idle_fraction=0.55)
+    e_isolated = dp.config_energy_pj(cfg, idle_fraction=0.0)
+    assert e_full > e_isolated * 1.2     # glitching matters (Sec. V harris)
+
+
+def test_asic_bound_beats_cgra():
+    def conv4(i0, i1, i2, i3, w0, w1, w2, w3, c):
+        return (((i0 * w0) + (i1 * w1)) + (i2 * w2)) + (i3 * w3) + c
+    g = trace_scalar(conv4, ["i0", "i1", "i2", "i3",
+                             "w0", "w1", "w2", "w3", "c"])
+    base = baseline_datapath()
+    c0 = evaluate_mapping(base, map_application(base, g, "conv"), "base")
+    asic = vector_mac_asic_energy_per_op_pj()
+    assert asic < c0.cgra_energy_per_op_pj / 3   # Table I ordering
+
+
+def test_io_overhead_scales_with_inputs():
+    dp2 = Datapath()
+    add_pattern(dp2, pattern_from_spec([("add", (-1, -1))]), "a")
+    dp3 = Datapath()
+    add_pattern(dp3, pattern_from_spec(
+        [("mul", (-1, -1)), ("add", (0, -1)), ("add", (1, -1))]), "b")
+    # Sec. II-C: more PE inputs -> more CB area
+    assert dp3.area_um2(include_io=True) - dp3.area_um2() > \
+        dp2.area_um2(include_io=True) - dp2.area_um2()
+
+
+def test_total_area_is_pe_times_count():
+    def f(a, b, c):
+        return a * b + c
+    g = trace_scalar(f, ["a", "b", "c"])
+    base = baseline_datapath()
+    cost = evaluate_mapping(base, map_application(base, g, "f"), "base")
+    assert cost.total_area_um2 == pytest.approx(
+        cost.pe_area_um2 * cost.n_pes)

@@ -1,0 +1,103 @@
+"""Graph IR: tracing, interpretation, canonical labels."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.graphir import (Graph, interpret, pattern_from_spec, trace_fn,
+                           trace_scalar)
+from repro.graphir.graph import free_in_ports, sink_nodes
+from repro.graphir.symtrace import fmax, fsel, fshr
+
+
+def conv4(i0, i1, i2, i3, w0, w1, w2, w3, c):
+    return (((i0 * w0) + (i1 * w1)) + (i2 * w2)) + (i3 * w3) + c
+
+
+NAMES = ["i0", "i1", "i2", "i3", "w0", "w1", "w2", "w3", "c"]
+
+
+def test_scalar_trace_matches_eval():
+    g = trace_scalar(conv4, NAMES)
+    rng = np.random.default_rng(0)
+    for _ in range(5):
+        vals = {n: float(rng.normal()) for n in NAMES}
+        out = interpret(g, vals)
+        assert np.allclose(out[0], conv4(*[vals[n] for n in NAMES]))
+
+
+def test_scalar_trace_structure():
+    g = trace_scalar(conv4, NAMES)
+    hist = g.op_histogram()
+    assert hist["mul"] == 4 and hist["add"] == 4
+    assert hist["input"] == 9
+
+
+def test_trace_with_sel_and_shift():
+    def f(a, b):
+        return fsel(a > b, fshr(a + b, 1.0), fmax(a, b))
+    g = trace_scalar(f, ["a", "b"])
+    for a, b in [(1.0, 5.0), (5.0, 1.0), (2.0, 2.0)]:
+        out = interpret(g, {"a": a, "b": b})[0]
+        expect = max(a, b) if a > b else (a + b) / 2
+        assert np.allclose(out, expect)
+
+
+def test_jaxpr_trace_rmsnorm():
+    def rms(x, w):
+        v = jnp.mean(x * x, axis=-1, keepdims=True)
+        return x * (1.0 / jnp.sqrt(v + 1e-6)) * w
+    g = trace_fn(rms, jnp.ones((4, 8)), jnp.ones((8,)))
+    hist = g.op_histogram()
+    assert hist.get("mul", 0) >= 3
+    assert hist.get("rsum", 0) == 1 or hist.get("rmean", 0) == 1
+    assert "sqrt" in hist or "rsqrt" in hist
+
+
+def test_jaxpr_trace_inlines_custom_jvp():
+    g = trace_fn(jax.nn.silu, jnp.ones((4,)))
+    assert "sigmoid" in g.op_histogram()
+    assert "opaque" not in g.op_histogram()
+
+
+def test_canonical_label_isomorphism_invariance():
+    g1 = pattern_from_spec([("mul", (-1, -1)), ("add", (0, -1))])
+    # same graph built in a different node order
+    g2 = Graph()
+    b = g2.add_node("add")
+    a = g2.add_node("mul")
+    g2.add_edge(a, b, 1)  # commutative: port collapses
+    assert g1.canonical_label() == g2.canonical_label()
+
+
+def test_canonical_label_distinguishes():
+    g1 = pattern_from_spec([("mul", (-1, -1)), ("add", (0, -1))])
+    g2 = pattern_from_spec([("add", (-1, -1)), ("mul", (0, -1))])
+    assert g1.canonical_label() != g2.canonical_label()
+
+
+def test_noncommutative_ports_matter():
+    g1 = pattern_from_spec([("mul", (-1, -1)), ("sub", (0, -1))])   # m - ?
+    g2 = Graph()
+    m = g2.add_node("mul")
+    s = g2.add_node("sub")
+    g2.add_edge(m, s, 1)                                            # ? - m
+    assert g1.canonical_label() != g2.canonical_label()
+
+
+def test_free_ports_and_sinks():
+    g = pattern_from_spec([("mul", (-1, -1)), ("add", (0, -1))])
+    free = free_in_ports(g)
+    assert len(free) == 3          # mul has 2, add has 1
+    assert sink_nodes(g) == [1]
+
+
+def test_topo_order_cycle_detection():
+    g = Graph()
+    a = g.add_node("add")
+    b = g.add_node("add")
+    g.add_edge(a, b, 0)
+    g.add_edge(b, a, 0)
+    with pytest.raises(ValueError):
+        g.topo_order()

@@ -1,0 +1,59 @@
+"""Paper application suites: traced graphs match their scalar oracles on
+real data, and have the structure Sec. V describes."""
+
+import numpy as np
+import pytest
+
+from repro.apps import image, mlkernels
+from repro.graphir import interpret
+
+
+@pytest.mark.parametrize("name", sorted(image.APPS))
+def test_traced_graph_matches_oracle_on_image(name):
+    spec = image.APPS[name]
+    g = image.build_graph(name)
+    rng = np.random.default_rng(1)
+    k = spec["window"]
+    for _ in range(3):
+        window = {n: float(v) for n, v in
+                  zip(spec["inputs"], rng.uniform(0, 1023, k * k))}
+        got = interpret(g, window)
+        exp = spec["fn"](*[window[n] for n in spec["inputs"]])
+        exps = exp if isinstance(exp, tuple) else (exp,)
+        for o, e in zip(got, exps):
+            np.testing.assert_allclose(o, e, rtol=1e-9)
+
+
+@pytest.mark.parametrize("name", sorted(mlkernels.ML_APPS))
+def test_ml_kernel_graph_matches_oracle(name):
+    spec = mlkernels.ML_APPS[name]
+    g = mlkernels.build_graph(name)
+    rng = np.random.default_rng(2)
+    vals = {n: float(v) for n, v in
+            zip(spec["inputs"], rng.uniform(-2, 2, len(spec["inputs"])))}
+    got = interpret(g, vals)
+    exp = spec["fn"](*[vals[n] for n in spec["inputs"]])
+    np.testing.assert_allclose(got[0], exp, rtol=1e-9)
+
+
+def test_camera_is_most_complex():
+    """Sec. V-A: camera pipeline is the most complex of the four apps."""
+    sizes = {n: image.build_graph(n).num_compute_nodes()
+             for n in image.APPS}
+    assert max(sizes, key=sizes.get) == "camera"
+    assert sizes["camera"] > 200      # paper: 221 ops per output pixel
+
+
+def test_conv_kernel_is_mac_chain():
+    g = mlkernels.build_graph("conv")
+    hist = g.op_histogram()
+    assert hist["mul"] == 18 and hist["add"] >= 17   # 2ch x 3x3 MACs
+    assert hist["max"] == 1                           # ReLU
+
+
+def test_gaussian_blur_end_to_end_image():
+    img = np.arange(100, dtype=np.float64).reshape(10, 10)
+    out = image.run_reference("gaussian", img)
+    assert out.shape == (8, 8)
+    # blur of a linear ramp stays a ramp away from borders
+    assert np.all(np.diff(out[4]) > 0)

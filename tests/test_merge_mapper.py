@@ -1,0 +1,103 @@
+"""Subgraph merging (Sec. III-C, Fig. 5) + application mapping (Sec. IV)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (Datapath, add_pattern, baseline_datapath,
+                        map_application, single_op_pattern, validate_config)
+from repro.core.clique import max_weight_clique
+from repro.graphir import pattern_from_spec, trace_scalar
+
+
+def test_merge_shares_units():
+    """Two patterns using adders+const must share hardware (Fig. 5e)."""
+    gA = pattern_from_spec([("const", ()), ("add", (0, -1)), ("add", (1, -1))])
+    gB = pattern_from_spec([("const", ()), ("mul", (-1, -1)),
+                            ("add", (1, -1)), ("add", (2, 0))])
+    dp = Datapath()
+    add_pattern(dp, gA, "A")
+    units_after_a = len(dp.units)
+    add_pattern(dp, gB, "B")
+    # B adds only the multiplier; adders and const are merged
+    assert len(dp.units) == units_after_a + 1
+    assert len(dp.mux_ways()) >= 1          # at least one config mux appears
+
+
+def test_merged_configs_execute_correctly():
+    gA = pattern_from_spec([("mul", (-1, -1)), ("add", (0, -1))])
+    gB = pattern_from_spec([("mul", (-1, -1)), ("sub", (0, -1)),
+                            ("max", (1, -1))])
+    dp = Datapath()
+    cfgA = add_pattern(dp, gA, "A")
+    cfgB = add_pattern(dp, gB, "B")
+    for cfg in (cfgA, cfgB):
+        ok, msg = validate_config(dp, cfg, trials=8)
+        assert ok, msg
+
+
+def test_merge_is_cheaper_than_disjoint():
+    gA = pattern_from_spec([("mul", (-1, -1)), ("add", (0, -1))])
+    gB = pattern_from_spec([("mul", (-1, -1)), ("add", (0, -1)),
+                            ("add", (1, -1))])
+    merged = Datapath()
+    add_pattern(merged, gA, "A")
+    add_pattern(merged, gB, "B")
+    disjoint = Datapath()
+    add_pattern(disjoint, gA, "A")
+    # build B without sharing by using a fresh datapath
+    only_b = Datapath()
+    add_pattern(only_b, gB, "B")
+    assert merged.area_um2() < disjoint.area_um2() + only_b.area_um2()
+
+
+def test_baseline_pe_structure():
+    dp = baseline_datapath()
+    units = sorted(u.unit for u in dp.units.values())
+    assert "adder" in units and "multiplier" in units and "lut" in units
+    # every config still validates through the muxes
+    for name, cfg in list(dp.configs.items())[:6]:
+        ok, msg = validate_config(dp, cfg)
+        assert ok, (name, msg)
+
+
+def test_max_weight_clique_exact():
+    # triangle 0-1-2 with big weights plus isolated heavy vertex 3
+    weights = [5.0, 4.0, 3.0, 10.0]
+    adj = [{1, 2}, {0, 2}, {0, 1}, set()]
+    best = max_weight_clique(weights, adj)
+    assert sorted(best) == [0, 1, 2]          # 12 beats the single 10
+    weights2 = [5.0, 4.0, 3.0, 13.0]
+    assert max_weight_clique(weights2, adj) == [3]
+
+
+def test_mapper_covers_everything():
+    def conv4(i0, i1, i2, i3, w0, w1, w2, w3, c):
+        return (((i0 * w0) + (i1 * w1)) + (i2 * w2)) + (i3 * w3) + c
+    g = trace_scalar(conv4, ["i0", "i1", "i2", "i3",
+                             "w0", "w1", "w2", "w3", "c"])
+    dp = baseline_datapath({"add", "mul"})
+    add_pattern(dp, pattern_from_spec([("mul", (-1, -1)), ("add", (0, -1))]),
+                "sg:muladd")
+    m = map_application(dp, g)
+    assert not m.unmapped
+    assert m.total_ops == g.num_compute_nodes() - \
+        sum(1 for op in g.nodes.values() if op == "const")
+    # non-overlap over hard (non-const) nodes
+    seen = set()
+    for inst in m.instances:
+        assert not (inst.covered & seen)
+        seen |= inst.covered
+    # the merged config is actually used
+    assert any(i.config == "sg:muladd" for i in m.instances)
+    assert m.ops_per_pe > 1.0
+
+
+def test_mapper_const_variants():
+    from repro.graphir.symtrace import Tracer
+    t = Tracer()
+    x = t.input("x")
+    t.output(x * 3.0)
+    dp = baseline_datapath({"mul"})
+    m = map_application(dp, t.graph)
+    assert not m.unmapped
+    assert m.instances[0].config in ("op:mul_c1", "op:mul")

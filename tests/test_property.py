@@ -1,0 +1,110 @@
+"""Hypothesis property tests on the system's core invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Datapath, add_pattern, maximal_independent_set,
+                        validate_config)
+from repro.graphir import Graph
+from repro.graphir.ops import OPS
+
+# ops safe for random-pattern property testing (total functions)
+_SAFE_OPS = ["add", "sub", "mul", "min", "max", "abs", "neg"]
+
+
+@st.composite
+def random_pattern(draw):
+    """Connected random DAG of 2..5 safe ops (+ optional const leaf)."""
+    n = draw(st.integers(2, 5))
+    g = Graph()
+    ids = []
+    for i in range(n):
+        op = draw(st.sampled_from(_SAFE_OPS))
+        nid = g.add_node(op)
+        # connect to a previous node on port 0 to stay connected
+        if ids:
+            src = draw(st.sampled_from(ids))
+            arity = OPS[op].arity
+            port = draw(st.integers(0, arity - 1)) if arity else 0
+            g.add_edge(src, nid, port)
+        ids.append(nid)
+    if draw(st.booleans()):
+        c = g.add_node("const", value=draw(st.floats(-2, 2, allow_nan=False)))
+        # feed const into a free port if one exists
+        from repro.graphir.graph import free_in_ports
+        free = free_in_ports(g)
+        free = [fp for fp in free if g.nodes[fp[0]] != "const"]
+        if free:
+            node, port = free[draw(st.integers(0, len(free) - 1))]
+            g.add_edge(c, node, port)
+    return g
+
+
+@settings(max_examples=40, deadline=None)
+@given(pats=st.lists(random_pattern(), min_size=1, max_size=3))
+def test_merged_datapath_implements_every_pattern(pats):
+    """THE merging invariant: after merging any sequence of patterns, every
+    config still computes exactly its source subgraph through the muxes."""
+    dp = Datapath()
+    for i, p in enumerate(pats):
+        add_pattern(dp, p, f"cfg{i}", validate=False)
+    for name, cfg in dp.configs.items():
+        ok, msg = validate_config(dp, cfg, trials=3)
+        assert ok, f"{name}: {msg}"
+
+
+@settings(max_examples=40, deadline=None)
+@given(pats=st.lists(random_pattern(), min_size=2, max_size=3))
+def test_merging_never_exceeds_disjoint_area(pats):
+    merged = Datapath()
+    total_disjoint = 0.0
+    for i, p in enumerate(pats):
+        add_pattern(merged, p, f"cfg{i}", validate=False)
+        solo = Datapath()
+        add_pattern(solo, p, "only", validate=False)
+        total_disjoint += solo.area_um2()
+    # merging may add muxes/config bits but must beat fully disjoint
+    # datapaths on unit area; allow small bookkeeping slack
+    assert merged.area_um2() <= total_disjoint * 1.05 + 50.0
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.frozensets(st.integers(0, 12), min_size=1, max_size=4),
+                min_size=1, max_size=12))
+def test_mis_independent_and_maximal(sets):
+    picked = maximal_independent_set(sets)
+    chosen = [sets[i] for i in picked]
+    # independent
+    for i in range(len(chosen)):
+        for j in range(i + 1, len(chosen)):
+            assert not (chosen[i] & chosen[j])
+    # maximal: every unpicked set conflicts with some picked set
+    picked_union = set()
+    for s in chosen:
+        picked_union |= s
+    for i, s in enumerate(sets):
+        if i not in picked:
+            assert s & picked_union
+
+
+@settings(max_examples=30, deadline=None)
+@given(random_pattern())
+def test_canonical_label_invariant_under_relabeling(g):
+    assert g.canonical_label() == g.relabeled().canonical_label()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.floats(-100, 100, allow_nan=False, width=32),
+                min_size=1, max_size=300))
+def test_int8_compression_error_bound(vals):
+    """Quantization error <= half an LSB of the block scale."""
+    import jax.numpy as jnp
+    from repro.sharding.compression import _quantize, BLOCK
+    x = jnp.asarray(np.asarray(vals, np.float32))
+    q, scale = _quantize(x)
+    deq = (q.astype(jnp.float32) * scale).reshape(-1)[:x.shape[0]]
+    err = np.abs(np.asarray(deq) - np.asarray(x))
+    n = x.shape[0]
+    pad = (-n) % BLOCK
+    scales = np.repeat(np.asarray(scale)[:, 0], BLOCK)[:n]
+    assert np.all(err <= scales * 0.5 + 1e-6)

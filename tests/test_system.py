@@ -1,0 +1,66 @@
+"""End-to-end behaviour of the paper's system (DSE pipeline + claims)."""
+
+import numpy as np
+import pytest
+
+from repro.apps import image, image_graphs, ml_graphs
+from repro.core import (MiningConfig, baseline_datapath, domain_pe,
+                        evaluate_mapping, map_application, specialize_per_app)
+
+FAST_MINING = MiningConfig(min_support=3, max_pattern_nodes=6,
+                           time_budget_s=20, max_patterns_per_level=40)
+
+
+@pytest.fixture(scope="module")
+def gaussian_dse():
+    g = image.build_graph("gaussian")
+    return g, specialize_per_app({"gaussian": g}, FAST_MINING,
+                                 max_merge=3)["gaussian"]
+
+
+def test_specialization_reduces_energy_and_area(gaussian_dse):
+    """Paper Fig. 8 direction: specialized PEs beat PE1 on energy/op and
+    total area."""
+    g, res = gaussian_dse
+    costs = [v.costs["gaussian"] for v in res.variants]
+    assert costs[-1].energy_per_op_pj < costs[0].energy_per_op_pj
+    assert costs[-1].total_area_um2 < costs[0].total_area_um2
+    assert costs[-1].ops_per_pe > 1.2
+
+
+def test_baseline_pe_is_worst(gaussian_dse):
+    g, res = gaussian_dse
+    base = baseline_datapath()
+    c0 = evaluate_mapping(base, map_application(base, g, "gaussian"),
+                          "baseline")
+    best = res.best_variant("gaussian").costs["gaussian"]
+    assert best.energy_per_op_pj < c0.energy_per_op_pj
+    assert best.total_area_um2 < c0.total_area_um2
+
+
+def test_every_variant_maps_fully(gaussian_dse):
+    g, res = gaussian_dse
+    for v in res.variants:
+        assert v.costs["gaussian"].unmapped == 0
+
+
+def test_domain_pe_supports_all_apps():
+    """Paper Fig. 10/11: one domain PE runs every app in the domain and
+    still beats the baseline on each."""
+    apps = ml_graphs()
+    res = domain_pe(apps, FAST_MINING, per_app_subgraphs=1,
+                    domain_name="PE_ML")
+    variant = res.variants[0]
+    base = baseline_datapath()
+    for name, g in apps.items():
+        c = variant.costs[name]
+        assert c.unmapped == 0
+        c0 = evaluate_mapping(base, map_application(base, g, name), "base")
+        assert c.energy_per_op_pj < c0.energy_per_op_pj, name
+
+
+def test_image_reference_executes():
+    img = np.arange(64, dtype=np.float64).reshape(8, 8)
+    out = image.run_reference("gaussian", img)
+    assert out.shape == (6, 6)
+    assert np.all(np.isfinite(out))
