@@ -1,0 +1,97 @@
+"""Fabric PnR benchmark: JAX-batched annealing vs the single-chain Python
+placer, plus router and HPWL-kernel microbenchmarks.
+
+The headline comparison holds total annealing work fixed — C chains x S
+sweeps — and times (a) the Python reference run chain-by-chain and (b) the
+JAX engine running all chains in lockstep; at >= 32 chains the batched
+path must win (acceptance criterion).  ``us_per_call`` is microseconds per
+*chain*.
+
+Run:  PYTHONPATH=src python -m benchmarks.pnr_bench
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.apps import image_graphs
+from repro.core import baseline_datapath, map_application
+from repro.core.dse import app_ops
+from repro.fabric import FabricSpec, extract_netlist, lower, place, route_nets
+from repro.fabric.place import anneal_jax, anneal_python
+
+from .common import emit
+
+SWEEPS = 24
+CHAIN_COUNTS = (1, 8, 32)
+
+
+def _problem():
+    app = image_graphs()["harris"]
+    dp = baseline_datapath(app_ops(app))
+    mapping = map_application(dp, app, "harris")
+    spec = FabricSpec(rows=8, cols=8)
+    netlist = extract_netlist(mapping, app, spec)
+    return dp, mapping, app, spec, netlist
+
+
+def run() -> None:
+    dp, mapping, app, spec, netlist = _problem()
+    problem = lower(netlist, spec)
+
+    # -- python single-chain reference, run `chains` times sequentially ----
+    py_us = {}
+    for chains in CHAIN_COUNTS:
+        t0 = time.perf_counter()
+        costs = [anneal_python(problem, seed=c, sweeps=SWEEPS)[1]
+                 for c in range(chains)]
+        dt = (time.perf_counter() - t0) * 1e6
+        py_us[chains] = dt / chains
+        emit(f"pnr_anneal_python_c{chains}", dt / chains,
+             f"best_hpwl={min(costs):.0f}")
+
+    # -- jax batched chains (first call includes trace+compile; report the
+    # steady-state second call, which is what a DSE sweep pays) ------------
+    jax_us = {}
+    for chains in CHAIN_COUNTS:
+        anneal_jax(problem, chains=chains, seed=0, sweeps=SWEEPS)  # warmup
+        t0 = time.perf_counter()
+        _, costs = anneal_jax(problem, chains=chains, seed=1, sweeps=SWEEPS)
+        dt = (time.perf_counter() - t0) * 1e6
+        jax_us[chains] = dt / chains
+        emit(f"pnr_anneal_jax_c{chains}", dt / chains,
+             f"best_hpwl={float(np.min(costs)):.0f}")
+
+    for chains in CHAIN_COUNTS:
+        emit(f"pnr_jax_speedup_c{chains}", jax_us[chains],
+             f"python/jax={py_us[chains] / jax_us[chains]:.2f}x")
+
+    # -- router ------------------------------------------------------------
+    placement = place(netlist, spec, backend="jax", chains=8, sweeps=SWEEPS)
+    t0 = time.perf_counter()
+    routes = route_nets(netlist, placement, spec)
+    dt = (time.perf_counter() - t0) * 1e6
+    emit("pnr_route_harris", dt,
+         f"wl={routes.wirelength};overflow={routes.overflow}")
+
+    # -- HPWL kernel microbenchmark ---------------------------------------
+    from repro.kernels.pnr_cost import hpwl_batched
+
+    rng = np.random.default_rng(0)
+    n_ent = problem.n_entities
+    pos = problem.slot_xy[
+        np.stack([rng.permutation(n_ent) for _ in range(256)])]
+    pins = problem.net_pins
+    mask = problem.net_mask
+    hpwl_batched(pos, pins, mask).block_until_ready()      # warmup
+    t0 = time.perf_counter()
+    hpwl_batched(pos, pins, mask).block_until_ready()
+    dt = (time.perf_counter() - t0) * 1e6
+    emit("pnr_hpwl_batched_256", dt, f"nets={pins.shape[0]}")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -12,7 +12,7 @@ import time
 
 def main() -> None:
     from . import (fig8_camera_specialization, fig10_image_pe_ip,
-                   fig11_ml_pe, kernel_bench, mining_bench,
+                   fig11_ml_pe, kernel_bench, mining_bench, pnr_bench,
                    table1_cgra_vs_asic)
     print("name,us_per_call,derived")
     t0 = time.time()
@@ -22,6 +22,7 @@ def main() -> None:
     fig11_ml_pe.run()           # Fig. 11
     table1_cgra_vs_asic.run()   # Table I
     kernel_bench.run()          # TPU-adaptation kernel statistics
+    pnr_bench.run()             # fabric place-and-route (array level)
     print(f"# total benchmark wall time: {time.time()-t0:.1f}s",
           file=sys.stderr)
 

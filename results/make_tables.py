@@ -34,6 +34,30 @@ def roofline_table(rows, mesh="single"):
     return "\n".join(out), skips
 
 
+def fabric_table(rows):
+    """Figs. 8/10/11 companion: per-PE columns next to array-accurate ones.
+
+    Rows are AppCost records (dataclasses.asdict) written by a DSE sweep
+    run with ``fabric=FabricSpec(...)``; the per-tile columns reproduce the
+    paper's figures, the fabric columns add what place-and-route sees —
+    routed wirelength, array utilization, and interconnect-inclusive
+    energy/op (0 values mean PnR was not run for that row).
+    """
+    out = ["| app | PE | pes | e/op (pJ) | area (kum2) | "
+           "fab e/op (pJ) | fab area (kum2) | wirelen | util | fab fmax |",
+           "|---|---|---:|---:|---:|---:|---:|---:|---:|---:|"]
+    for r in rows:
+        out.append(
+            f"| {r['app']} | {r['pe_name']} | {r['n_pes']} "
+            f"| {r['energy_per_op_pj']:.4f} | {r['total_area_um2']/1e3:.1f} "
+            f"| {r.get('fabric_energy_per_op_pj', 0.0):.4f} "
+            f"| {r.get('fabric_area_um2', 0.0)/1e3:.1f} "
+            f"| {r.get('fabric_wirelength', 0)} "
+            f"| {r.get('fabric_utilization', 0.0):.2f} "
+            f"| {r.get('fabric_fmax_ghz', 0.0):.2f} |")
+    return "\n".join(out)
+
+
 def dryrun_table(rows):
     out = ["| arch | shape | mesh | status | compile (s) | collectives "
            "(count) | collective bytes/dev | notes |",
@@ -61,5 +85,7 @@ if __name__ == "__main__":
     if which == "roofline":
         table, skips = roofline_table(rows)
         print(table)
+    elif which == "fabric":
+        print(fabric_table(rows))
     else:
         print(dryrun_table(rows))

@@ -53,6 +53,12 @@ class AppCost:
     cgra_area_um2: float = 0.0
     cgra_energy_pj: float = 0.0
     cgra_energy_per_op_pj: float = 0.0
+    # array level, filled by repro.fabric after place-and-route (0 = not run)
+    fabric_area_um2: float = 0.0
+    fabric_energy_per_op_pj: float = 0.0
+    fabric_fmax_ghz: float = 0.0
+    fabric_wirelength: int = 0
+    fabric_utilization: float = 0.0
 
     def row(self) -> str:
         return (f"{self.app:<16} {self.pe_name:<10} pes={self.n_pes:<5d} "

@@ -35,6 +35,8 @@ class PEVariant:
     datapath: Datapath
     merged_subgraphs: List[str] = field(default_factory=list)
     costs: Dict[str, AppCost] = field(default_factory=dict)   # per app
+    fabric_costs: Dict[str, "object"] = field(default_factory=dict)
+    # per app FabricCost when fabric-level evaluation is enabled
 
 
 @dataclass
@@ -137,26 +139,66 @@ def build_variants(app_name: str, app: Graph,
 
 
 def evaluate_variants(variants: Sequence[PEVariant],
-                      apps: Dict[str, Graph]) -> None:
+                      apps: Dict[str, Graph],
+                      *, fabric: Optional[object] = None,
+                      fabric_backend: str = "jax",
+                      fabric_chains: int = 16,
+                      fabric_sweeps: int = 32,
+                      fabric_seed: int = 0) -> None:
+    """Map + cost every (variant, app) pair; optionally also at array level.
+
+    fabric: a :class:`repro.fabric.FabricSpec` — when given, each mapping is
+    placed and routed on the fabric (auto-grown when the variant needs more
+    tiles) and the array-accurate numbers are attached to the AppCost
+    records (``fabric_*`` fields) and kept in ``variant.fabric_costs``.
+    A specialized PE covers the same app with fewer instances, so it earns
+    both the per-tile win *and* shorter routes — the tradeoff only visible
+    at this level.
+    """
+    if fabric is not None:
+        from ..fabric import place_and_route
+        from ..fabric.cost import attach_fabric
     for v in variants:
         for app_name, app in apps.items():
             mapping = map_application(v.datapath, app, app_name)
-            v.costs[app_name] = evaluate_mapping(v.datapath, mapping, v.name)
+            cost = evaluate_mapping(v.datapath, mapping, v.name)
+            v.costs[app_name] = cost
+            if fabric is not None:
+                pnr = place_and_route(v.datapath, mapping, app, fabric,
+                                      backend=fabric_backend,
+                                      chains=fabric_chains,
+                                      sweeps=fabric_sweeps,
+                                      seed=fabric_seed, pe_name=v.name)
+                v.fabric_costs[app_name] = pnr.cost
+                attach_fabric(cost, pnr.cost)
 
 
 def specialize_per_app(apps: Dict[str, Graph],
                        mining: Optional[MiningConfig] = None,
                        *, max_merge: int = 4,
                        rank_mode: str = "mis",
-                       validate: bool = True) -> Dict[str, DSEResult]:
-    """Per-application DSE: PE1..PE5 per app (paper Sec. V-A camera sweep)."""
+                       validate: bool = True,
+                       fabric: Optional[object] = None,
+                       fabric_backend: str = "jax",
+                       fabric_chains: int = 16,
+                       fabric_sweeps: int = 32,
+                       fabric_seed: int = 0) -> Dict[str, DSEResult]:
+    """Per-application DSE: PE1..PE5 per app (paper Sec. V-A camera sweep).
+
+    Pass ``fabric=FabricSpec(...)`` to additionally place-and-route every
+    variant on the array (see :func:`evaluate_variants`).
+    """
     out: Dict[str, DSEResult] = {}
     for name, app in apps.items():
         t0 = time.monotonic()
         ranked = mine_and_rank(app, mining)
         variants = build_variants(name, app, ranked, max_merge=max_merge,
                                   rank_mode=rank_mode, validate=validate)
-        evaluate_variants(variants, {name: app})
+        evaluate_variants(variants, {name: app}, fabric=fabric,
+                          fabric_backend=fabric_backend,
+                          fabric_chains=fabric_chains,
+                          fabric_sweeps=fabric_sweeps,
+                          fabric_seed=fabric_seed)
         out[name] = DSEResult({name: app}, {name: ranked}, variants,
                               time.monotonic() - t0)
     return out
@@ -166,7 +208,12 @@ def domain_pe(apps: Dict[str, Graph],
               mining: Optional[MiningConfig] = None,
               *, per_app_subgraphs: int = 2,
               domain_name: str = "PE_DOM",
-              validate: bool = True) -> DSEResult:
+              validate: bool = True,
+              fabric: Optional[object] = None,
+              fabric_backend: str = "jax",
+              fabric_chains: int = 16,
+              fabric_sweeps: int = 32,
+              fabric_seed: int = 0) -> DSEResult:
     """Cross-application PE (paper's PE IP / PE ML)."""
     t0 = time.monotonic()
     mined: Dict[str, List[MinedSubgraph]] = {}
@@ -192,5 +239,9 @@ def domain_pe(apps: Dict[str, Graph],
             merged.append(cfg_name)
             count += 1
     variant = PEVariant(domain_name, dp, merged)
-    evaluate_variants([variant], apps)
+    evaluate_variants([variant], apps, fabric=fabric,
+                      fabric_backend=fabric_backend,
+                      fabric_chains=fabric_chains,
+                      fabric_sweeps=fabric_sweeps,
+                      fabric_seed=fabric_seed)
     return DSEResult(apps, mined, [variant], time.monotonic() - t0)

@@ -1,0 +1,64 @@
+"""Fabric place-and-route: map DSE variants onto an N x M CGRA array.
+
+The paper's loop (mine -> merge -> map -> cost) stops at the single-PE
+level; this subsystem models the array.  Given a
+:class:`~repro.core.mapper.Mapping` and a :class:`FabricSpec`, it extracts
+the inter-tile netlist, places cells with JAX-batched simulated annealing,
+routes every net over the mesh, and prices the result at array level —
+exposing the tradeoff the per-tile model cannot see: fewer, bigger PEs mean
+fewer tiles and shorter routes.
+
+    from repro.fabric import FabricSpec, place_and_route
+    pnr = place_and_route(dp, mapping, app, FabricSpec(rows=8, cols=8))
+    print(pnr.cost.row())
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+from ..core.mapper import Mapping
+from ..core.pe import Datapath
+from ..graphir.graph import Graph
+from .arch import FabricSpec, manhattan
+from .cost import FabricCost, attach_fabric, evaluate_fabric
+from .netlist import Cell, Net, Netlist, extract_netlist
+from .place import Placement, PlacementProblem, anneal_jax, anneal_python, \
+    lower, place
+from .route import RouteResult, RoutedNet, route_nets
+
+__all__ = [
+    "FabricSpec", "manhattan", "Cell", "Net", "Netlist", "extract_netlist",
+    "Placement", "PlacementProblem", "lower", "place", "anneal_jax",
+    "anneal_python", "RouteResult", "RoutedNet", "route_nets", "FabricCost",
+    "evaluate_fabric", "attach_fabric", "PnRResult", "place_and_route",
+]
+
+
+@dataclass
+class PnRResult:
+    spec: FabricSpec
+    netlist: Netlist
+    placement: Placement
+    routes: RouteResult
+    cost: FabricCost
+
+
+def place_and_route(dp: Datapath, mapping: Mapping, app: Graph,
+                    spec: Optional[FabricSpec] = None, *,
+                    backend: str = "jax", chains: int = 16,
+                    sweeps: int = 32, seed: int = 0,
+                    auto_size: bool = True, pe_name: str = "PE"
+                    ) -> PnRResult:
+    """Full flow: netlist -> place -> route -> array-level cost."""
+    spec = spec or FabricSpec()
+    netlist = extract_netlist(mapping, app, spec)
+    if auto_size:
+        spec = spec.fit(len(netlist.pe_cells), len(netlist.io_cells))
+    placement = place(netlist, spec, backend=backend, chains=chains,
+                      sweeps=sweeps, seed=seed)
+    routes = route_nets(netlist, placement, spec)
+    fc = evaluate_fabric(dp, mapping, netlist, placement, routes, spec,
+                         pe_name=pe_name)
+    return PnRResult(spec, netlist, placement, routes, fc)

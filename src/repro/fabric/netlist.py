@@ -1,0 +1,143 @@
+"""Mapping -> fabric netlist extraction (the exemplar's "packing" step).
+
+A :class:`~repro.core.mapper.Mapping` places every covered application node
+inside some PE instance; the fabric netlist is the inter-tile view of that
+cover:
+
+* one **PE cell** per mapped instance;
+* **I/O cells** for signals that enter/leave the array — application graph
+  inputs, graph outputs, and values exchanged with offloaded tensor macros.
+  Up to ``io_capacity`` distinct signals share one I/O cell (a streaming
+  memory-interface tile serves several operands);
+* one **net** per produced signal, from its driver cell to every cell that
+  consumes it externally.
+
+Constants are folded: ``const`` nodes live in configured constant registers
+inside the consuming PE (paper Fig. 2c), so they generate neither cells nor
+nets.  Values produced and consumed inside the same instance stay inside the
+tile and also generate no nets.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+from ..core.mapper import Mapping
+from ..graphir.graph import Graph
+from .arch import FabricSpec
+
+
+@dataclass
+class Cell:
+    name: str
+    kind: str                    # "pe" | "io_in" | "io_out"
+    instance: int = -1           # index into mapping.instances for PE cells
+    signals: List[int] = field(default_factory=list)   # app nodes on IO cells
+
+
+@dataclass
+class Net:
+    name: str
+    driver: str                  # cell name
+    sinks: List[str]             # cell names (deduped, sorted)
+    signal: int = -1             # producing app node
+
+    @property
+    def degree(self) -> int:
+        return 1 + len(self.sinks)
+
+
+@dataclass
+class Netlist:
+    app_name: str
+    cells: Dict[str, Cell] = field(default_factory=dict)
+    nets: List[Net] = field(default_factory=list)
+
+    @property
+    def pe_cells(self) -> List[Cell]:
+        return [c for c in self.cells.values() if c.kind == "pe"]
+
+    @property
+    def io_cells(self) -> List[Cell]:
+        return [c for c in self.cells.values() if c.kind != "pe"]
+
+    def summary(self) -> str:
+        return (f"Netlist[{self.app_name}: {len(self.pe_cells)} PEs, "
+                f"{len(self.io_cells)} IOs, {len(self.nets)} nets]")
+
+
+def extract_netlist(mapping: Mapping, app: Graph,
+                    spec: Optional[FabricSpec] = None,
+                    *, io_group: Optional[int] = None) -> Netlist:
+    """Build the inter-tile netlist for `mapping` of `app`.
+
+    io_group: distinct signals per I/O cell (defaults to spec.io_capacity,
+    else 4).
+    """
+    if io_group is None:
+        io_group = spec.io_capacity if spec is not None else 4
+    nl = Netlist(mapping.app_name)
+
+    # PE cells + home map (covered app node -> owning cell)
+    home: Dict[int, str] = {}
+    for i, inst in enumerate(mapping.instances):
+        cell = Cell(f"pe{i}", "pe", instance=i)
+        nl.cells[cell.name] = cell
+        for n in inst.covered:
+            home[n] = cell.name
+
+    off_array = set(mapping.offloaded)
+
+    # signal -> external consumer cells
+    consumers: Dict[int, Set[str]] = {}
+    for i, inst in enumerate(mapping.instances):
+        cname = f"pe{i}"
+        for n in inst.covered:
+            for port, src in app.in_edges(n).items():
+                if src in inst.covered or app.nodes.get(src) == "const":
+                    continue        # intra-tile wire / folded constant
+                consumers.setdefault(src, set()).add(cname)
+
+    # signals that leave the array: graph outputs, feeds into offloaded
+    # macros or explicit output nodes
+    leaves: Set[int] = set()
+    for n in home:
+        if n in app.outputs:
+            leaves.add(n)
+        for dst, _ in app.out_edges(n):
+            op = app.nodes[dst]
+            if dst in off_array or op == "output":
+                leaves.add(n)
+
+    # off-array producers consumed by PEs: graph inputs, offloaded macros,
+    # and (defensively) unmapped compute nodes
+    ext_inputs = sorted(s for s in consumers if s not in home)
+
+    def _alloc_io(signals: List[int], kind: str, prefix: str) -> Dict[int, str]:
+        where: Dict[int, str] = {}
+        for gi in range(0, len(signals), io_group):
+            group = signals[gi:gi + io_group]
+            cell = Cell(f"{prefix}{gi // io_group}", kind, signals=list(group))
+            nl.cells[cell.name] = cell
+            for s in group:
+                where[s] = cell.name
+        return where
+
+    in_cell_of = _alloc_io(ext_inputs, "io_in", "in")
+    out_cell_of = _alloc_io(sorted(leaves), "io_out", "out")
+
+    # nets: one per produced signal with external consumers
+    for sig in sorted(set(consumers) | leaves):
+        driver = home.get(sig) or in_cell_of.get(sig)
+        if driver is None:
+            continue
+        sinks = {c for c in consumers.get(sig, ()) if c != driver}
+        if sig in out_cell_of:
+            sinks.add(out_cell_of[sig])
+        sinks.discard(driver)
+        if not sinks:
+            continue
+        nl.nets.append(Net(f"n{sig}", driver, sorted(sinks), signal=sig))
+    nl.nets.sort(key=lambda n: n.name)
+    return nl

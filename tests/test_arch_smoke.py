@@ -37,6 +37,7 @@ def test_forward_shapes_and_finite(arch):
     assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCHS)
 def test_train_step_runs_and_updates(arch):
     cfg = get_config(arch).reduced()

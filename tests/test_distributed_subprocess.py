@@ -7,6 +7,10 @@ import textwrap
 
 import pytest
 
+# each test spawns a fresh interpreter and compiles against 8 fake devices;
+# excluded from the default tier-1 run (pytest -m slow to include)
+pytestmark = pytest.mark.slow
+
 ENV = {**os.environ, "PYTHONPATH": "src"}
 
 

@@ -84,6 +84,7 @@ def test_hlo_cost_trip_weighting():
     assert 2.0e6 < cost.flops < 8.0e6, cost.flops
 
 
+@pytest.mark.slow
 def test_gpipe_subprocess():
     """GPipe over 4 stages in a subprocess with 4 fake devices."""
     import subprocess

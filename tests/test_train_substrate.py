@@ -45,6 +45,7 @@ def test_grad_clip_applies():
     assert float(metrics["grad_norm"]) > 99.0
 
 
+@pytest.mark.slow
 def test_grad_accumulation_equivalence():
     """microbatches=2 must match microbatches=1 on the same global batch."""
     from repro.configs import get_config
@@ -107,6 +108,7 @@ def test_checkpoint_retention_and_tmp_ignored(tmp_path):
     assert latest_step(d) == 40
 
 
+@pytest.mark.slow
 def test_trainer_fault_injection_resumes(tmp_path):
     """A step that raises resumes from the last checkpoint and completes."""
     from repro.configs import get_config
