@@ -11,9 +11,9 @@ import time
 
 
 def main() -> None:
-    from . import (fig8_camera_specialization, fig10_image_pe_ip,
-                   fig11_ml_pe, kernel_bench, mining_bench, pnr_bench,
-                   table1_cgra_vs_asic)
+    from . import (fabric_ml_bench, fig8_camera_specialization,
+                   fig10_image_pe_ip, fig11_ml_pe, kernel_bench,
+                   mining_bench, pnr_bench, sim_bench, table1_cgra_vs_asic)
     print("name,us_per_call,derived")
     t0 = time.time()
     mining_bench.run()          # pipeline throughput (Sec. IV)
@@ -23,6 +23,8 @@ def main() -> None:
     table1_cgra_vs_asic.run()   # Table I
     kernel_bench.run()          # TPU-adaptation kernel statistics
     pnr_bench.run()             # fabric place-and-route (array level)
+    sim_bench.run()             # time domain: achieved II + golden check
+    fabric_ml_bench.run(fast=True)     # Fig. 11 @ 16x16 -> AppCost jsonl
     print(f"# total benchmark wall time: {time.time()-t0:.1f}s",
           file=sys.stderr)
 

@@ -1,0 +1,107 @@
+"""Time-domain benchmark: achieved II per app + tile-step kernel speedups.
+
+For every paper-suite app (Figs. 8/10/11) the full flow runs — map, place,
+route, modulo-schedule, cycle-accurate simulate — and emits the achieved
+initiation interval against the resource lower bound, the pipeline
+latency, the golden-check verdict (bit-exact vs ``graphir.interp``), and
+the steady-state simulation cost per pipelined iteration.
+
+The tile-step microbenchmark compares the three ALU dispatch backends of
+:mod:`repro.kernels.sim_step` on one batched step: the NumPy reference,
+the vmapped ``lax.switch`` (the ``lax.scan`` reference path used by
+``backend="jax"``), and the Pallas kernel (interpret mode off-TPU, so the
+ratio is only meaningful on TPU hosts — emitted either way).
+
+Run:  PYTHONPATH=src python -m benchmarks.sim_bench
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.apps import image_graphs, ml_graphs
+from repro.core import baseline_datapath, map_application
+from repro.core.dse import app_ops
+from repro.fabric import FabricSpec
+from repro.sim import build_sim, check_against_interp, random_inputs, simulate
+
+from .common import emit
+
+ITERATIONS = 4
+BATCH = 4
+
+
+def run() -> None:
+    apps = {**image_graphs(), **ml_graphs()}
+    mismatches = []
+    for name, app in apps.items():
+        dp = baseline_datapath(app_ops(app))
+        mapping = map_application(dp, app, name)
+        t0 = time.perf_counter()
+        prog, pnr = build_sim(dp, mapping, app, FabricSpec(rows=8, cols=8),
+                              place_backend="jax", chains=8, sweeps=16)
+        flow_us = (time.perf_counter() - t0) * 1e6
+        inputs = random_inputs(prog, ITERATIONS, BATCH, seed=0)
+        _, err, exact = check_against_interp(prog, app, inputs)
+        if not (exact and err == 0.0):
+            mismatches.append(name)
+        emit(f"sim_schedule_{name}", flow_us,
+             f"II={prog.ii};minII={prog.schedule.min_ii};"
+             f"lat={prog.latency};tiles={prog.n_inst};"
+             f"golden={'bit-exact' if exact and err == 0.0 else 'MISMATCH'}")
+
+        # steady state: second call reuses the compiled scan
+        simulate(prog, inputs)
+        t0 = time.perf_counter()
+        res = simulate(prog, inputs)
+        dt = (time.perf_counter() - t0) * 1e6
+        emit(f"sim_cycle_{name}", dt / (ITERATIONS * BATCH),
+             f"cycles={res.cycles};us_per_iter_per_sample="
+             f"{dt / (ITERATIONS * BATCH):.1f}")
+
+    _step_kernel_bench()
+    if mismatches:
+        # fail loudly so the (blocking) CI benchmark job enforces the
+        # acceptance criterion: bit-match on ALL Fig. 8/10/11 apps
+        raise SystemExit(f"golden MISMATCH on: {', '.join(mismatches)}")
+
+
+def _step_kernel_bench() -> None:
+    from repro.kernels.sim_step import (alu_step_jnp, alu_step_pallas,
+                                        alu_step_reference, op_table)
+
+    ops = op_table(["add", "sub", "mul", "min", "max", "sel", "ashr", "gt",
+                    "abs", "mac"])
+    rng = np.random.default_rng(0)
+    b, n = 64, 512
+    codes = rng.integers(0, len(ops), n).astype(np.int32)
+    a = rng.standard_normal((b, n)).astype(np.float32)
+    bb = rng.integers(-3, 4, (b, n)).astype(np.float32)
+    c = rng.standard_normal((b, n)).astype(np.float32)
+
+    t0 = time.perf_counter()
+    alu_step_reference(codes, a, bb, c, ops)
+    ref_us = (time.perf_counter() - t0) * 1e6
+
+    np.asarray(alu_step_jnp(codes, a, bb, c, ops))          # warmup/compile
+    t0 = time.perf_counter()
+    np.asarray(alu_step_jnp(codes, a, bb, c, ops))
+    jnp_us = (time.perf_counter() - t0) * 1e6
+
+    np.asarray(alu_step_pallas(codes, a, bb, c, ops))       # warmup/compile
+    t0 = time.perf_counter()
+    np.asarray(alu_step_pallas(codes, a, bb, c, ops))
+    pl_us = (time.perf_counter() - t0) * 1e6
+
+    emit("sim_step_reference", ref_us, f"lanes={b * n}")
+    emit("sim_step_jnp", jnp_us, f"ref/jnp={ref_us / jnp_us:.2f}x")
+    emit("sim_step_pallas", pl_us,
+         f"jnp/pallas={jnp_us / pl_us:.2f}x"
+         f"{' (interpret mode: compiles on TPU)' if pl_us > jnp_us else ''}")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -38,15 +38,20 @@ def fabric_table(rows):
     """Figs. 8/10/11 companion: per-PE columns next to array-accurate ones.
 
     Rows are AppCost records (dataclasses.asdict) written by a DSE sweep
-    run with ``fabric=FabricSpec(...)``; the per-tile columns reproduce the
-    paper's figures, the fabric columns add what place-and-route sees —
-    routed wirelength, array utilization, and interconnect-inclusive
-    energy/op (0 values mean PnR was not run for that row).
+    run with ``fabric=FabricOptions(...)``; the per-tile columns reproduce
+    the paper's figures, the fabric columns add what place-and-route sees —
+    routed wirelength, array utilization, interconnect-inclusive energy/op —
+    and the sim columns what the time-domain subsystem *measured*: achieved
+    initiation interval (vs its lower bound), sustained throughput, and
+    energy/op including idle cycles (0 values mean that stage was not run).
     """
     out = ["| app | PE | pes | e/op (pJ) | area (kum2) | "
-           "fab e/op (pJ) | fab area (kum2) | wirelen | util | fab fmax |",
-           "|---|---|---:|---:|---:|---:|---:|---:|---:|---:|"]
+           "fab e/op (pJ) | fab area (kum2) | wirelen | util | fab fmax | "
+           "II | minII | Gops | sim e/op (pJ) | ok |",
+           "|---|---|---:|---:|---:|---:|---:|---:|---:|---:"
+           "|---:|---:|---:|---:|---|"]
     for r in rows:
+        verified = {1: "Y", 0: "N"}.get(r.get("sim_verified", -1), "-")
         out.append(
             f"| {r['app']} | {r['pe_name']} | {r['n_pes']} "
             f"| {r['energy_per_op_pj']:.4f} | {r['total_area_um2']/1e3:.1f} "
@@ -54,7 +59,11 @@ def fabric_table(rows):
             f"| {r.get('fabric_area_um2', 0.0)/1e3:.1f} "
             f"| {r.get('fabric_wirelength', 0)} "
             f"| {r.get('fabric_utilization', 0.0):.2f} "
-            f"| {r.get('fabric_fmax_ghz', 0.0):.2f} |")
+            f"| {r.get('fabric_fmax_ghz', 0.0):.2f} "
+            f"| {r.get('sim_ii', 0)} | {r.get('sim_min_ii', 0)} "
+            f"| {r.get('sim_throughput_gops', 0.0):.1f} "
+            f"| {r.get('sim_energy_per_op_pj', 0.0):.4f} "
+            f"| {verified} |")
     return "\n".join(out)
 
 

@@ -59,6 +59,19 @@ class AppCost:
     fabric_fmax_ghz: float = 0.0
     fabric_wirelength: int = 0
     fabric_utilization: float = 0.0
+    # time domain, filled by repro.sim after modulo scheduling + simulation
+    # (0 = not run).  These are *measured* on the scheduled array, not
+    # estimated: achieved initiation interval, the schedule's lower bound,
+    # pipeline fill latency, per-tile activity, sustained throughput at the
+    # fabric clock, and energy/op including the idle cycles each tile burns
+    # between fires — the number the static model cannot see.
+    sim_ii: int = 0
+    sim_min_ii: int = 0
+    sim_latency_cycles: int = 0
+    sim_active_frac: float = 0.0
+    sim_throughput_gops: float = 0.0
+    sim_energy_per_op_pj: float = 0.0
+    sim_verified: int = -1         # 1 bit-exact vs interp, 0 mismatch, -1 n/a
 
     def row(self) -> str:
         return (f"{self.app:<16} {self.pe_name:<10} pes={self.n_pes:<5d} "
@@ -106,6 +119,34 @@ def evaluate_mapping(dp: Datapath, mapping: Mapping, pe_name: str = "PE",
         cgra_energy_pj=cgra_energy,
         cgra_energy_per_op_pj=cgra_energy / max(1, total_ops),
     )
+
+
+def attach_sim(cost: AppCost, dp: Datapath, schedule,
+               *, fabric_cost=None, verified: int = -1) -> AppCost:
+    """Write measured time-domain numbers onto an AppCost record.
+
+    schedule: a :class:`repro.sim.schedule.ModuloSchedule`.  Throughput is
+    the steady state — ``total_ops`` useful ops retire every II cycles at
+    the fabric clock.  Energy/op re-prices the array per *iteration*: every
+    invocation at its config energy (as before) plus ``II - 1`` idle cycles
+    per tile at the idle-cycle energy, all divided by the ops of one
+    iteration.  A schedule with slack (II above the resource bound) now
+    shows up as worse energy/op, which the cycle-free model never could.
+    """
+    cost.sim_ii = schedule.ii
+    cost.sim_min_ii = schedule.min_ii
+    cost.sim_latency_cycles = schedule.latency
+    cost.sim_active_frac = 1.0 / schedule.ii
+    fmax = (fabric_cost.fmax_ghz if fabric_cost is not None
+            else cost.fabric_fmax_ghz) or cost.fmax_ghz
+    total_ops = max(1, cost.total_ops)
+    cost.sim_throughput_gops = total_ops * fmax / schedule.ii
+    base = (fabric_cost.total_energy_pj if fabric_cost is not None
+            else cost.cgra_energy_pj)
+    idle = (schedule.ii - 1) * cost.n_pes * dp.idle_cycle_energy_pj()
+    cost.sim_energy_per_op_pj = (base + idle) / total_ops
+    cost.sim_verified = verified
+    return cost
 
 
 def vector_mac_asic_energy_per_op_pj(n_lanes: int = 8) -> float:

@@ -141,36 +141,71 @@ def build_variants(app_name: str, app: Graph,
 def evaluate_variants(variants: Sequence[PEVariant],
                       apps: Dict[str, Graph],
                       *, fabric: Optional[object] = None,
-                      fabric_backend: str = "jax",
-                      fabric_chains: int = 16,
-                      fabric_sweeps: int = 32,
-                      fabric_seed: int = 0) -> None:
+                      fabric_backend: Optional[str] = None,
+                      fabric_chains: Optional[int] = None,
+                      fabric_sweeps: Optional[int] = None,
+                      fabric_seed: Optional[int] = None,
+                      simulate: bool = False) -> None:
     """Map + cost every (variant, app) pair; optionally also at array level.
 
-    fabric: a :class:`repro.fabric.FabricSpec` — when given, each mapping is
-    placed and routed on the fabric (auto-grown when the variant needs more
-    tiles) and the array-accurate numbers are attached to the AppCost
-    records (``fabric_*`` fields) and kept in ``variant.fabric_costs``.
-    A specialized PE covers the same app with fewer instances, so it earns
-    both the per-tile win *and* shorter routes — the tradeoff only visible
-    at this level.
+    fabric: a :class:`repro.fabric.FabricOptions` (or a bare ``FabricSpec``
+    plus the legacy ``fabric_*`` kwargs, folded in automatically) — when
+    given, each mapping is placed and routed on the fabric (auto-grown when
+    the variant needs more tiles) and the array-accurate numbers are
+    attached to the AppCost records (``fabric_*`` fields) and kept in
+    ``variant.fabric_costs``.  A specialized PE covers the same app with
+    fewer instances, so it earns both the per-tile win *and* shorter
+    routes — the tradeoff only visible at this level.
+
+    simulate: with a fabric, additionally modulo-schedule and cycle-
+    accurately simulate every mapping, attaching *measured* throughput
+    (``sim_*`` fields: achieved II, latency, activity, energy/op including
+    idle cycles) and — when ``options.sim_verify`` — the bit-exact golden
+    check against ``graphir.interp``.
     """
-    if fabric is not None:
+    from ..fabric.options import FabricOptions
+
+    options = FabricOptions.coerce(fabric, backend=fabric_backend,
+                                   chains=fabric_chains,
+                                   sweeps=fabric_sweeps, seed=fabric_seed,
+                                   simulate=simulate)
+    if options is not None:
         from ..fabric import place_and_route
         from ..fabric.cost import attach_fabric
+        from .costmodel import attach_sim
     for v in variants:
         for app_name, app in apps.items():
             mapping = map_application(v.datapath, app, app_name)
             cost = evaluate_mapping(v.datapath, mapping, v.name)
             v.costs[app_name] = cost
-            if fabric is not None:
-                pnr = place_and_route(v.datapath, mapping, app, fabric,
-                                      backend=fabric_backend,
-                                      chains=fabric_chains,
-                                      sweeps=fabric_sweeps,
-                                      seed=fabric_seed, pe_name=v.name)
-                v.fabric_costs[app_name] = pnr.cost
-                attach_fabric(cost, pnr.cost)
+            if options is None:
+                continue
+            pnr = place_and_route(v.datapath, mapping, app, options.spec,
+                                  backend=options.backend,
+                                  chains=options.chains,
+                                  sweeps=options.sweeps,
+                                  seed=options.seed, pe_name=v.name,
+                                  hpwl_backend=options.hpwl_backend)
+            v.fabric_costs[app_name] = pnr.cost
+            attach_fabric(cost, pnr.cost)
+            if options.simulate:
+                from ..sim import (build_sim, check_against_interp,
+                                   random_inputs)
+                prog, _ = build_sim(v.datapath, mapping, app, pnr=pnr)
+                verified = -1
+                if options.sim_verify:
+                    inputs = random_inputs(prog, options.sim_iterations,
+                                           options.sim_batch,
+                                           seed=options.seed)
+                    _, err, exact = check_against_interp(
+                        prog, app, inputs, backend=options.sim_backend)
+                    verified = int(exact and err == 0.0)
+                    if not verified:
+                        raise AssertionError(
+                            f"simulated {app_name} on {v.name} diverges "
+                            f"from graphir.interp (max |err|={err:.3e})")
+                attach_sim(cost, v.datapath, prog.schedule,
+                           fabric_cost=pnr.cost, verified=verified)
 
 
 def specialize_per_app(apps: Dict[str, Graph],
@@ -179,14 +214,18 @@ def specialize_per_app(apps: Dict[str, Graph],
                        rank_mode: str = "mis",
                        validate: bool = True,
                        fabric: Optional[object] = None,
-                       fabric_backend: str = "jax",
-                       fabric_chains: int = 16,
-                       fabric_sweeps: int = 32,
-                       fabric_seed: int = 0) -> Dict[str, DSEResult]:
+                       fabric_backend: Optional[str] = None,
+                       fabric_chains: Optional[int] = None,
+                       fabric_sweeps: Optional[int] = None,
+                       fabric_seed: Optional[int] = None,
+                       simulate: bool = False) -> Dict[str, DSEResult]:
     """Per-application DSE: PE1..PE5 per app (paper Sec. V-A camera sweep).
 
-    Pass ``fabric=FabricSpec(...)`` to additionally place-and-route every
-    variant on the array (see :func:`evaluate_variants`).
+    Pass ``fabric=FabricOptions(...)`` (or a bare ``FabricSpec``) to
+    additionally place-and-route every variant on the array, and
+    ``simulate=True`` to modulo-schedule + cycle-accurately simulate each
+    mapping so the records carry measured throughput
+    (see :func:`evaluate_variants`).
     """
     out: Dict[str, DSEResult] = {}
     for name, app in apps.items():
@@ -198,7 +237,7 @@ def specialize_per_app(apps: Dict[str, Graph],
                           fabric_backend=fabric_backend,
                           fabric_chains=fabric_chains,
                           fabric_sweeps=fabric_sweeps,
-                          fabric_seed=fabric_seed)
+                          fabric_seed=fabric_seed, simulate=simulate)
         out[name] = DSEResult({name: app}, {name: ranked}, variants,
                               time.monotonic() - t0)
     return out
@@ -210,10 +249,11 @@ def domain_pe(apps: Dict[str, Graph],
               domain_name: str = "PE_DOM",
               validate: bool = True,
               fabric: Optional[object] = None,
-              fabric_backend: str = "jax",
-              fabric_chains: int = 16,
-              fabric_sweeps: int = 32,
-              fabric_seed: int = 0) -> DSEResult:
+              fabric_backend: Optional[str] = None,
+              fabric_chains: Optional[int] = None,
+              fabric_sweeps: Optional[int] = None,
+              fabric_seed: Optional[int] = None,
+              simulate: bool = False) -> DSEResult:
     """Cross-application PE (paper's PE IP / PE ML)."""
     t0 = time.monotonic()
     mined: Dict[str, List[MinedSubgraph]] = {}
@@ -243,5 +283,5 @@ def domain_pe(apps: Dict[str, Graph],
                       fabric_backend=fabric_backend,
                       fabric_chains=fabric_chains,
                       fabric_sweeps=fabric_sweeps,
-                      fabric_seed=fabric_seed)
+                      fabric_seed=fabric_seed, simulate=simulate)
     return DSEResult(apps, mined, [variant], time.monotonic() - t0)

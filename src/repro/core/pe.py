@@ -172,6 +172,19 @@ class Datapath:
         e += reg_pj * (cfg.n_inputs + len(cfg.out_sel)) + clock_pj
         return e
 
+    def idle_cycle_energy_pj(self, *, fraction: float = 0.15,
+                             clock_pj: float = 0.18) -> float:
+        """Energy a tile burns per cycle it does NOT fire.
+
+        Between invocations the input latches hold, so datapath glitching
+        is far below the active-invocation idle_fraction — what remains is
+        the clock/config tree plus residual toggling (`fraction` of each
+        unit's op energy).  Used by the time-domain cost feedback: a design
+        running at II charges every tile II-1 of these per iteration.
+        """
+        return (fraction * sum(UNIT_ENERGY[u.unit]
+                               for u in self.units.values()) + clock_pj)
+
     def critical_path_ns(self) -> float:
         """Longest combinational path through the datapath (any config)."""
         delay = {

@@ -24,15 +24,17 @@ from ..graphir.graph import Graph
 from .arch import FabricSpec, manhattan
 from .cost import FabricCost, attach_fabric, evaluate_fabric
 from .netlist import Cell, Net, Netlist, extract_netlist
+from .options import FabricOptions
 from .place import Placement, PlacementProblem, anneal_jax, anneal_python, \
     lower, place
 from .route import RouteResult, RoutedNet, route_nets
 
 __all__ = [
-    "FabricSpec", "manhattan", "Cell", "Net", "Netlist", "extract_netlist",
-    "Placement", "PlacementProblem", "lower", "place", "anneal_jax",
-    "anneal_python", "RouteResult", "RoutedNet", "route_nets", "FabricCost",
-    "evaluate_fabric", "attach_fabric", "PnRResult", "place_and_route",
+    "FabricSpec", "FabricOptions", "manhattan", "Cell", "Net", "Netlist",
+    "extract_netlist", "Placement", "PlacementProblem", "lower", "place",
+    "anneal_jax", "anneal_python", "RouteResult", "RoutedNet", "route_nets",
+    "FabricCost", "evaluate_fabric", "attach_fabric", "PnRResult",
+    "place_and_route",
 ]
 
 
@@ -49,15 +51,15 @@ def place_and_route(dp: Datapath, mapping: Mapping, app: Graph,
                     spec: Optional[FabricSpec] = None, *,
                     backend: str = "jax", chains: int = 16,
                     sweeps: int = 32, seed: int = 0,
-                    auto_size: bool = True, pe_name: str = "PE"
-                    ) -> PnRResult:
+                    auto_size: bool = True, pe_name: str = "PE",
+                    hpwl_backend: str = "jnp") -> PnRResult:
     """Full flow: netlist -> place -> route -> array-level cost."""
     spec = spec or FabricSpec()
     netlist = extract_netlist(mapping, app, spec)
     if auto_size:
         spec = spec.fit(len(netlist.pe_cells), len(netlist.io_cells))
     placement = place(netlist, spec, backend=backend, chains=chains,
-                      sweeps=sweeps, seed=seed)
+                      sweeps=sweeps, seed=seed, hpwl_backend=hpwl_backend)
     routes = route_nets(netlist, placement, spec)
     fc = evaluate_fabric(dp, mapping, netlist, placement, routes, spec,
                          pe_name=pe_name)

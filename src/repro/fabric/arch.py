@@ -28,12 +28,18 @@ class FabricSpec:
     io_capacity: int = 4         # distinct signals one I/O tile can stream
     hop_energy_pj: float = 0.035  # per word per switch-to-switch hop (16 nm)
     hop_delay_ns: float = 0.055   # wire + switch delay per hop
+    latch_depth: int = 4         # per-input iteration FIFO depth: an operand
+    # word survives latch_depth initiation intervals before the stream
+    # overwrites it, so consumer fire times may lag producer arrivals by up
+    # to latch_depth x II (Garnet-style input FIFOs; bounds operand skew)
 
     def __post_init__(self) -> None:
         if self.rows < 2 or self.cols < 2:
             raise ValueError("fabric must be at least 2x2")
         if self.channel_width < 1 or self.io_capacity < 1:
             raise ValueError("channel_width and io_capacity must be >= 1")
+        if self.latch_depth < 1:
+            raise ValueError("latch_depth must be >= 1")
 
     # -- tiles -------------------------------------------------------------
     @property
@@ -111,7 +117,8 @@ class FabricSpec:
                           channel_width=self.channel_width,
                           io_capacity=self.io_capacity,
                           hop_energy_pj=self.hop_energy_pj,
-                          hop_delay_ns=self.hop_delay_ns)
+                          hop_delay_ns=self.hop_delay_ns,
+                          latch_depth=self.latch_depth)
 
     def summary(self) -> str:
         return (f"Fabric[{self.cols}x{self.rows} PEs | "

@@ -1,0 +1,89 @@
+"""Bundled fabric/simulation options for DSE sweeps.
+
+``core.dse`` grew one ``fabric_*`` kwarg per place-and-route knob; with the
+time-domain subsystem adding scheduler/simulator knobs, the loose kwargs
+are folded into one :class:`FabricOptions` record.  The legacy kwargs are
+still accepted by the DSE entry points and folded into an options object,
+so existing call sites keep working.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Optional
+
+from .arch import FabricSpec
+
+
+@dataclass(frozen=True)
+class FabricOptions:
+    """Everything array-level evaluation needs, in one place.
+
+    spec           — the target array (auto-grown per variant when needed).
+    backend        — annealing engine: "jax" (batched chains) | "python".
+    hpwl_backend   — placement cost kernel: "jnp" | "pallas"
+                     (:func:`repro.kernels.pnr_cost.hpwl_pallas`, interpret
+                     mode off-TPU).
+    chains/sweeps/seed — annealing budget and determinism.
+    simulate       — run the modulo scheduler + cycle-accurate simulator on
+                     every (variant, app) mapping and attach measured
+                     throughput (``sim_*`` fields) to the AppCost records.
+    sim_iterations/sim_batch — pipelined iterations x input batches fed to
+                     the simulator (also drives the golden check).
+    sim_backend    — tile-step dispatch: "jax" | "pallas".
+    sim_verify     — bit-compare simulated outputs against graphir.interp
+                     and record the result (raises on mismatch).
+    """
+
+    spec: Optional[FabricSpec] = None
+    backend: str = "jax"
+    hpwl_backend: str = "jnp"
+    chains: int = 16
+    sweeps: int = 32
+    seed: int = 0
+    simulate: bool = False
+    sim_iterations: int = 3
+    sim_batch: int = 2
+    sim_backend: str = "jax"
+    sim_verify: bool = True
+
+    def with_spec(self, spec: FabricSpec) -> "FabricOptions":
+        return replace(self, spec=spec)
+
+    @staticmethod
+    def coerce(fabric, *, backend: Optional[str] = None,
+               chains: Optional[int] = None, sweeps: Optional[int] = None,
+               seed: Optional[int] = None,
+               simulate: bool = False) -> Optional["FabricOptions"]:
+        """Normalize the legacy ``fabric=FabricSpec(...)`` + ``fabric_*``
+        kwarg style (and plain None) into a FabricOptions or None.
+
+        Legacy kwargs left at None fall back to the FabricOptions field
+        defaults; passing any of them alongside a FabricOptions object is
+        an error rather than a silent discard.
+        """
+        legacy = {"fabric_backend": backend, "fabric_chains": chains,
+                  "fabric_sweeps": sweeps, "fabric_seed": seed}
+        if fabric is None:
+            if simulate:
+                raise ValueError("simulate=True requires a fabric "
+                                 "(pass FabricOptions or FabricSpec)")
+            return None
+        if isinstance(fabric, FabricOptions):
+            overridden = [k for k, v in legacy.items() if v is not None]
+            if overridden:
+                raise ValueError(
+                    f"legacy kwargs {overridden} are ignored when passing a "
+                    f"FabricOptions — set those fields on the options object")
+            return replace(fabric, simulate=fabric.simulate or simulate)
+        if isinstance(fabric, FabricSpec):
+            defaults = FabricOptions()
+            return FabricOptions(
+                spec=fabric,
+                backend=defaults.backend if backend is None else backend,
+                chains=defaults.chains if chains is None else chains,
+                sweeps=defaults.sweeps if sweeps is None else sweeps,
+                seed=defaults.seed if seed is None else seed,
+                simulate=simulate)
+        raise TypeError(f"fabric must be FabricSpec or FabricOptions, "
+                        f"got {type(fabric).__name__}")

@@ -187,16 +187,31 @@ def anneal_python(p: PlacementProblem, *, seed: int = 0, sweeps: int = 48,
 # ---------------------------------------------------------------------------
 @functools.lru_cache(maxsize=64)
 def _build_annealer(steps: int, n_pe_c: int, n_io_c: int,
-                    n_pe_s: int, n_io_s: int, t0: float, t1: float):
+                    n_pe_s: int, n_io_s: int, t0: float, t1: float,
+                    hpwl_backend: str = "jnp"):
     """Compile one batched annealer per static problem shape.
 
     Caching here (rather than a fresh ``jax.jit`` per call) is what makes a
     DSE sweep cheap: every variant of the same fabric reuses the program.
+
+    hpwl_backend selects the move-scoring kernel: ``"jnp"`` (the jitted
+    jax.numpy reduction) or ``"pallas"`` (the Pallas kernel from
+    :mod:`repro.kernels.pnr_cost`, compiled on TPU and interpreted on CPU
+    hosts).  Both compute identical HPWL, so chains accept identical move
+    sequences and the two backends return identical placements.
     """
     import jax
     import jax.numpy as jnp
 
-    from ..kernels.pnr_cost import hpwl
+    from ..kernels.pnr_cost import hpwl, hpwl_pallas
+
+    if hpwl_backend == "pallas":
+        interpret = jax.default_backend() != "tpu"
+        score = functools.partial(hpwl_pallas, interpret=interpret)
+    elif hpwl_backend == "jnp":
+        score = hpwl
+    else:
+        raise ValueError(f"unknown hpwl_backend {hpwl_backend!r}")
 
     n_real = n_pe_c + n_io_c
     p_pe = n_pe_c / n_real
@@ -204,7 +219,7 @@ def _build_annealer(steps: int, n_pe_c: int, n_io_c: int,
 
     def chain(key, slot_of0, slot_xy, net_pins, net_mask):
         def cost(slot_of):
-            return hpwl(slot_xy[slot_of], net_pins, net_mask)
+            return score(slot_xy[slot_of], net_pins, net_mask)
 
         # draw the whole move schedule up front: one RNG call per stream
         # instead of several threefry hashes inside every loop step
@@ -242,7 +257,8 @@ def _build_annealer(steps: int, n_pe_c: int, n_io_c: int,
 
 
 def anneal_jax(p: PlacementProblem, *, chains: int = 32, seed: int = 0,
-               sweeps: int = 48, t0: Optional[float] = None, t1: float = 0.02
+               sweeps: int = 48, t0: Optional[float] = None,
+               t1: float = 0.02, hpwl_backend: str = "jnp"
                ) -> Tuple[np.ndarray, np.ndarray]:
     """C independent chains; returns (slot_of (C, E), costs (C,))."""
     import jax
@@ -255,7 +271,8 @@ def anneal_jax(p: PlacementProblem, *, chains: int = 32, seed: int = 0,
     t0 = _default_t0(p) if t0 is None else t0
 
     run = _build_annealer(steps, p.n_pe_cells, p.n_io_cells,
-                          p.n_pe_slots, p.n_io_slots, float(t0), float(t1))
+                          p.n_pe_slots, p.n_io_slots, float(t0), float(t1),
+                          hpwl_backend)
     rng = _random.Random(seed)
     init = np.stack([_init_slots(p, rng) for _ in range(chains)])
     keys = jax.random.split(jax.random.PRNGKey(seed), chains)
@@ -265,11 +282,18 @@ def anneal_jax(p: PlacementProblem, *, chains: int = 32, seed: int = 0,
 
 def place(netlist: Netlist, spec: FabricSpec, *, backend: str = "jax",
           chains: int = 32, sweeps: int = 48, seed: int = 0,
-          t0: Optional[float] = None, t1: float = 0.02) -> Placement:
+          t0: Optional[float] = None, t1: float = 0.02,
+          hpwl_backend: str = "jnp") -> Placement:
     """Anneal and return the best chain's placement."""
+    if hpwl_backend not in ("jnp", "pallas"):
+        raise ValueError(f"unknown hpwl_backend {hpwl_backend!r}")
     p = lower(netlist, spec)
 
     if backend == "python":
+        if hpwl_backend != "jnp":
+            raise ValueError(
+                "hpwl_backend applies to the jax annealer only; the python "
+                "reference scores moves without the HPWL kernel")
         chain_results = [anneal_python(p, seed=seed + c, sweeps=sweeps,
                                        t0=t0, t1=t1)
                          for c in range(chains)]
@@ -277,7 +301,7 @@ def place(netlist: Netlist, spec: FabricSpec, *, backend: str = "jax",
         costs = np.asarray([c for _, c in chain_results], np.float32)
     elif backend == "jax":
         slots, costs = anneal_jax(p, chains=chains, seed=seed, sweeps=sweeps,
-                                  t0=t0, t1=t1)
+                                  t0=t0, t1=t1, hpwl_backend=hpwl_backend)
     else:
         raise ValueError(f"unknown backend {backend!r}")
 

@@ -86,10 +86,6 @@ def _hpwl_kernel(x_ref, y_ref, m_ref, o_ref):
     o_ref[...] = jnp.where(valid, (xmax - xmin) + (ymax - ymin), 0.0)
 
 
-def _round_up(n: int, k: int) -> int:
-    return max(k, (n + k - 1) // k * k)
-
-
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def hpwl_pallas(pos: jax.Array, net_pins: jax.Array, net_mask: jax.Array,
                 *, interpret: bool = True) -> jax.Array:
@@ -99,9 +95,11 @@ def hpwl_pallas(pos: jax.Array, net_pins: jax.Array, net_mask: jax.Array,
     cheap; the reduction is the VPU-shaped part), pads the pin matrices to
     TPU tile multiples (8 x 128 for float32), and reduces per net.
     """
+    from .tiling import LANE, SUBLANE, round_up
+
     n, d = net_pins.shape
     xy = pos[net_pins].astype(jnp.float32)           # (N, D, 2)
-    n_pad, d_pad = _round_up(n, 8), _round_up(d, 128)
+    n_pad, d_pad = round_up(n, SUBLANE), round_up(d, LANE)
     x = jnp.zeros((n_pad, d_pad), jnp.float32).at[:n, :d].set(xy[..., 0])
     y = jnp.zeros((n_pad, d_pad), jnp.float32).at[:n, :d].set(xy[..., 1])
     m = jnp.zeros((n_pad, d_pad), jnp.int32).at[:n, :d].set(

@@ -1,0 +1,12 @@
+"""Shared TPU tile-shape helpers for the Pallas kernels in this package."""
+
+from __future__ import annotations
+
+#: float32 VMEM tile shape (sublane x lane)
+SUBLANE = 8
+LANE = 128
+
+
+def round_up(n: int, k: int) -> int:
+    """Smallest multiple of k that is >= max(n, k)."""
+    return max(k, (n + k - 1) // k * k)

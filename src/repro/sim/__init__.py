@@ -1,0 +1,36 @@
+"""Time-domain subsystem: modulo scheduling + cycle-accurate simulation.
+
+The static DSE pipeline (mine -> merge -> map -> place -> route) prices a
+design; this subsystem *executes* it over time:
+
+* :mod:`repro.sim.schedule` — iterative modulo scheduler assigning every
+  PE instance, I/O stream, and routed hop a (cycle, II) slot, with the
+  achieved initiation interval reported against the recurrence/resource
+  minimum;
+* :mod:`repro.sim.cycle` — cycle-accurate functional simulator running all
+  tiles in lockstep as a ``jax.lax.scan`` over cycles, batched over input
+  sets, with the inner tile-step dispatched through
+  :mod:`repro.kernels.sim_step` (``backend="jax"`` or ``"pallas"``);
+* :mod:`repro.sim.golden` — bit-exact verification of simulated outputs
+  against :func:`repro.graphir.interp.interpret`.
+
+Quick start::
+
+    from repro.sim import build_sim, simulate, verify_mapping
+    prog, pnr = build_sim(dp, mapping, app, FabricSpec(rows=8, cols=8))
+    print(prog.summary())                    # II, latency, tiles, wires
+    print(verify_mapping(dp, mapping, app).row())
+"""
+
+from .cycle import SimProgram, SimResult, lower_program, simulate
+from .golden import (GoldenReport, build_sim, check_against_interp,
+                     random_inputs, verify_mapping)
+from .schedule import (ModuloSchedule, min_ii, modulo_schedule,
+                       route_timing)
+
+__all__ = [
+    "SimProgram", "SimResult", "lower_program", "simulate",
+    "GoldenReport", "build_sim", "check_against_interp", "random_inputs",
+    "verify_mapping", "ModuloSchedule", "min_ii", "modulo_schedule",
+    "route_timing",
+]

@@ -1,0 +1,421 @@
+"""Iterative modulo scheduler for a placed-and-routed mapping.
+
+The static pipeline (mine -> merge -> map -> place -> route) says nothing
+about *time*: every PE instance fires once per loop iteration, and the
+initiation interval (II) — how many cycles separate consecutive iterations —
+is what turns a mapped design into delivered throughput.  This module
+assigns each schedulable unit a start cycle under modulo resource
+reservation (Rau's iterative modulo scheduling), reporting the achieved II
+against the recurrence/resource-constrained minimum (MII).
+
+Timing model (shared with :mod:`repro.sim.cycle`, which executes it):
+
+* a producer's output register is valid one cycle after it fires
+  (``L_OUT = 1``);
+* every mesh hop is a pipeline register: the value reaches hop depth ``d``
+  of its routed tree at ``t_producer + L_OUT + d``;
+* each consumer tile latches an arriving operand into a per-(cell, signal)
+  input FIFO the cycle it lands (``L_LATCH = 1``); the FIFO is
+  ``spec.latch_depth`` iterations deep and refreshed every II cycles, so a
+  consumer must fire inside the window
+  ``arrival + 1 <= t <= arrival + latch_depth * II`` or the stream
+  overwrites its operand (the classic modulo hold constraint, relaxed by
+  Garnet-style input FIFOs that absorb operand-arrival skew).
+
+Schedulable units ("ops"):
+
+* ``("in", signal)`` — an I/O tile streaming one input word; a tile with k
+  signals needs k distinct cycle slots mod II, which is what makes stencil
+  apps input-bandwidth-bound (ResMII = max signals per I/O cell);
+* ``("pe", instance)`` — a PE instance firing its configured invocation;
+  it also reserves the output-capture slot at every io_out tile it feeds.
+
+Application graphs here are acyclic (the tracer builds pure dataflow), so
+RecMII is 1; the machinery still detects cycles and refuses them loudly.
+"""
+
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+from ..fabric.arch import Coord, FabricSpec
+from ..fabric.netlist import Netlist
+from ..fabric.place import Placement
+from ..fabric.route import RoutedNet, RouteResult
+
+#: output-register and input-latch latencies (cycles)
+L_OUT = 1
+L_LATCH = 1
+
+OpKey = Tuple[str, int]          # ("in", signal) | ("pe", instance index)
+
+
+@dataclass
+class NetTiming:
+    """Per-net register chain derived from the routed tree.
+
+    ``parent[t]`` is the tile whose hop register feeds tile ``t``;
+    ``depth[t]`` is the register distance from the driver.  One pipeline
+    register exists per non-driver tile of the tree (per-track, so nets
+    sharing a physical channel keep separate registers).
+    """
+
+    driver: Coord
+    parent: Dict[Coord, Coord]
+    depth: Dict[Coord, int]
+
+
+def route_timing(net: RoutedNet) -> NetTiming:
+    """Min-depth parent chain over the routed (tree-ish) edge set."""
+    depth: Dict[Coord, int] = {net.driver: 0}
+    # relax to fixpoint; edge sets are tiny and may rarely contain a
+    # redundant in-edge, so pick the min-depth parent deterministically
+    changed = True
+    while changed:
+        changed = False
+        for (a, b) in sorted(net.edges):
+            if a in depth and depth[a] + 1 < depth.get(b, 1 << 30):
+                depth[b] = depth[a] + 1
+                changed = True
+    parent: Dict[Coord, Coord] = {}
+    for (a, b) in sorted(net.edges):
+        if a in depth and depth[a] + 1 == depth.get(b):
+            parent.setdefault(b, a)
+    for s in net.sinks:
+        if s not in depth:
+            raise ValueError(f"routed net does not reach sink {s}")
+    return NetTiming(net.driver, parent, depth)
+
+
+@dataclass
+class DepEdge:
+    src: OpKey
+    dst: OpKey
+    hops: int                    # register depth driver -> consumer tile
+    signal: int
+
+
+@dataclass
+class CaptureEvent:
+    """An output word landing on an io_out tile (one word/cycle/tile)."""
+
+    producer: OpKey
+    signal: int
+    tile: Coord
+    hops: int
+
+
+@dataclass
+class ModuloSchedule:
+    ii: int
+    rec_mii: int
+    res_mii: int
+    start: Dict[OpKey, int]                  # op -> fire cycle (iteration 0)
+    capture: Dict[int, int]                  # leaving signal -> capture cycle
+    latency: int                             # cycles to iteration-0 outputs
+    attempts: int                            # IIs tried before success
+    latch_depth: int = 1                     # input-FIFO depth scheduled for
+    hop_time: Dict[Tuple[str, Coord], int] = field(default_factory=dict)
+    # (net name, tile) -> cycle its hop register first holds iteration-0 data
+    net_timing: Dict[str, NetTiming] = field(default_factory=dict)
+    net_src: Dict[str, OpKey] = field(default_factory=dict)
+    # per-net register chains and producer ops, published so the simulator
+    # lowers against the exact timing the scheduler used (single source)
+
+    @property
+    def min_ii(self) -> int:
+        return max(self.rec_mii, self.res_mii)
+
+    def summary(self) -> str:
+        return (f"ModuloSchedule[II={self.ii} (min {self.min_ii}: "
+                f"rec {self.rec_mii}/res {self.res_mii}) "
+                f"latency={self.latency} ops={len(self.start)}]")
+
+
+@dataclass
+class _Problem:
+    ops: List[OpKey]
+    tile_of: Dict[OpKey, Coord]
+    deps: List[DepEdge]
+    captures: List[CaptureEvent]
+    preds: Dict[OpKey, List[DepEdge]]
+    succs: Dict[OpKey, List[DepEdge]]
+    caps_of: Dict[OpKey, List[CaptureEvent]]
+    net_src: Dict[str, OpKey] = field(default_factory=dict)
+
+
+def _build_problem(netlist: Netlist, placement: Placement,
+                   routes: RouteResult) -> Tuple[_Problem,
+                                                 Dict[str, NetTiming]]:
+    coords = placement.coords
+    cell_kind = {name: c.kind for name, c in netlist.cells.items()}
+    inst_of_cell = {name: c.instance for name, c in netlist.cells.items()
+                    if c.kind == "pe"}
+
+    ops: List[OpKey] = []
+    tile_of: Dict[OpKey, Coord] = {}
+    for c in sorted(netlist.io_cells, key=lambda c: c.name):
+        if c.kind != "io_in":
+            continue
+        for s in c.signals:
+            ops.append(("in", s))
+            tile_of[("in", s)] = coords[c.name]
+    for c in sorted(netlist.pe_cells, key=lambda c: c.instance):
+        ops.append(("pe", c.instance))
+        tile_of[("pe", c.instance)] = coords[c.name]
+
+    timing: Dict[str, NetTiming] = {}
+    deps: List[DepEdge] = []
+    captures: List[CaptureEvent] = []
+    routed = {n.name: n for n in routes.nets}
+    net_src: Dict[str, OpKey] = {}
+    for net in sorted(netlist.nets, key=lambda n: n.name):
+        nt = route_timing(routed[net.name])
+        timing[net.name] = nt
+        if cell_kind[net.driver] == "pe":
+            src: OpKey = ("pe", inst_of_cell[net.driver])
+        else:
+            src = ("in", net.signal)
+        net_src[net.name] = src
+        for sink in net.sinks:
+            d = nt.depth[coords[sink]]
+            if cell_kind[sink] == "pe":
+                deps.append(DepEdge(src, ("pe", inst_of_cell[sink]), d,
+                                    net.signal))
+            else:
+                captures.append(CaptureEvent(src, net.signal, coords[sink],
+                                             d))
+
+    preds: Dict[OpKey, List[DepEdge]] = {op: [] for op in ops}
+    succs: Dict[OpKey, List[DepEdge]] = {op: [] for op in ops}
+    for e in deps:
+        preds[e.dst].append(e)
+        succs[e.src].append(e)
+    caps_of: Dict[OpKey, List[CaptureEvent]] = {op: [] for op in ops}
+    for ev in captures:
+        caps_of[ev.producer].append(ev)
+    return _Problem(ops, tile_of, deps, captures, preds, succs, caps_of,
+                    net_src), timing
+
+
+def min_ii(netlist: Netlist, routes: RouteResult, spec: FabricSpec,
+           placement: Placement) -> Tuple[int, int]:
+    """(RecMII, ResMII) lower bounds for any feasible modulo schedule."""
+    p, _ = _build_problem(netlist, placement, routes)
+    return _min_ii(p, routes, spec)
+
+
+def _min_ii(p: "_Problem", routes: RouteResult,
+            spec: FabricSpec) -> Tuple[int, int]:
+    # RecMII: app dataflow graphs are acyclic; verify and refuse otherwise
+    order = _topo(p)
+    if order is None:
+        raise NotImplementedError(
+            "modulo scheduling of cyclic (loop-carried) instance graphs "
+            "is not supported; application graphs are pure dataflow")
+    rec = 1
+    # ResMII: every tile issues at most one word per cycle
+    per_tile: Dict[Coord, int] = {}
+    for op in p.ops:
+        t = p.tile_of[op]
+        per_tile[t] = per_tile.get(t, 0) + 1
+    for ev in p.captures:
+        per_tile[ev.tile] = per_tile.get(ev.tile, 0) + 1
+    res = max(per_tile.values(), default=1)
+    # routed channels: tracks shared beyond capacity would also bound II
+    caps = spec.routing_edges()
+    for e, u in routes.edge_usage.items():
+        res = max(res, -(-u // caps[e]))
+    return rec, max(1, res)
+
+
+def _topo(p: _Problem) -> Optional[List[OpKey]]:
+    indeg = {op: 0 for op in p.ops}
+    for e in p.deps:
+        indeg[e.dst] += 1
+    ready = sorted(op for op, k in indeg.items() if k == 0)
+    order: List[OpKey] = []
+    while ready:
+        op = ready.pop(0)
+        order.append(op)
+        for e in sorted(p.succs[op], key=lambda e: e.dst):
+            indeg[e.dst] -= 1
+            if indeg[e.dst] == 0:
+                ready.append(e.dst)
+        ready.sort()
+    return order if len(order) == len(p.ops) else None
+
+
+def _heights(p: _Problem) -> Dict[OpKey, int]:
+    """Longest dependence path from each op to any terminal (priority)."""
+    order = _topo(p)
+    assert order is not None
+    h = {op: 0 for op in p.ops}
+    for op in reversed(order):
+        for e in p.succs[op]:
+            h[op] = max(h[op], h[e.dst] + e.hops + L_OUT + L_LATCH)
+        for ev in p.caps_of[op]:
+            h[op] = max(h[op], ev.hops + L_OUT)
+    return h
+
+
+def modulo_schedule(netlist: Netlist, placement: Placement,
+                    routes: RouteResult, spec: FabricSpec,
+                    *, max_ii: Optional[int] = None,
+                    budget_factor: int = 8) -> ModuloSchedule:
+    """Schedule every I/O stream and PE instance under modulo resources.
+
+    Tries II = MII, MII+1, ... with Rau-style scheduling (priority by
+    height, bounded eviction budget per II).  Raises if nothing fits by
+    ``max_ii`` (default: number of ops + MII, always sufficient for a DAG).
+    """
+    p, timing = _build_problem(netlist, placement, routes)
+    rec_mii, res_mii = _min_ii(p, routes, spec)
+    mii = max(rec_mii, res_mii)
+    if max_ii is None:
+        max_ii = mii + len(p.ops) + 1
+    heights = _heights(p)
+    depth = spec.latch_depth
+
+    attempts = 0
+    for ii in range(mii, max_ii + 1):
+        attempts += 1
+        start = _try_schedule(p, ii, heights, budget_factor, depth)
+        if start is not None:
+            return _finish(p, timing, ii, rec_mii, res_mii, start, attempts,
+                           depth)
+    raise RuntimeError(f"no modulo schedule found up to II={max_ii}")
+
+
+def _slots_needed(p: _Problem, op: OpKey, t: int,
+                  ii: int) -> List[Tuple[Coord, int]]:
+    slots = [(p.tile_of[op], t % ii)]
+    for ev in p.caps_of[op]:
+        slots.append((ev.tile, (t + L_OUT + ev.hops) % ii))
+    return slots
+
+
+def _try_schedule(p: _Problem, ii: int, heights: Dict[OpKey, int],
+                  budget_factor: int, depth: int
+                  ) -> Optional[Dict[OpKey, int]]:
+    time: Dict[OpKey, int] = {}
+    mrt: Dict[Tuple[Coord, int], OpKey] = {}
+    order_ix = {op: i for i, op in enumerate(p.ops)}
+    heap: List[Tuple[int, int, OpKey]] = []
+    for op in p.ops:
+        heapq.heappush(heap, (-heights[op], order_ix[op], op))
+    last_placed: Dict[OpKey, int] = {}
+    budget = budget_factor * len(p.ops) + 64
+
+    def unschedule(op: OpKey) -> None:
+        t = time.pop(op)
+        for slot in _slots_needed(p, op, t, ii):
+            if mrt.get(slot) == op:
+                del mrt[slot]
+        heapq.heappush(heap, (-heights[op], order_ix[op], op))
+
+    while heap:
+        _, _, op = heapq.heappop(heap)
+        if op in time:
+            continue                      # stale heap entry
+        # dependence window w.r.t. already-scheduled neighbors
+        hold = depth * ii
+        early, late = 0, 1 << 30
+        for e in p.preds[op]:
+            if e.src in time:
+                arr = time[e.src] + L_OUT + e.hops
+                early = max(early, arr + L_LATCH)
+                late = min(late, arr + hold)
+        for e in p.succs[op]:
+            if e.dst in time:
+                # consumer window: arr + L_LATCH <= t_dst <= arr + hold
+                early = max(early, time[e.dst] - e.hops - L_OUT - hold)
+                late = min(late, time[e.dst] - e.hops - L_OUT - L_LATCH)
+        early = max(early, 0)
+
+        placed = False
+        hi = min(late, early + ii - 1)
+        for t in range(early, hi + 1):
+            if all(s not in mrt for s in _slots_needed(p, op, t, ii)):
+                time[op] = t
+                for s in _slots_needed(p, op, t, ii):
+                    mrt[s] = op
+                last_placed[op] = t
+                placed = True
+                break
+        if placed:
+            continue
+
+        # forced placement with eviction (Rau)
+        budget -= 1
+        if budget <= 0:
+            return None
+        t = max(early, last_placed.get(op, -1) + 1)
+        evict: Set[OpKey] = set()
+        for s in _slots_needed(p, op, t, ii):
+            if s in mrt:
+                evict.add(mrt[s])
+        for e in p.preds[op]:
+            if e.src in time:
+                arr = time[e.src] + L_OUT + e.hops
+                if not (arr + L_LATCH <= t <= arr + hold):
+                    evict.add(e.src)
+        for e in p.succs[op]:
+            if e.dst in time:
+                arr = t + L_OUT + e.hops
+                if not (arr + L_LATCH <= time[e.dst] <= arr + hold):
+                    evict.add(e.dst)
+        for other in sorted(evict, key=lambda o: order_ix[o]):
+            unschedule(other)
+        time[op] = t
+        for s in _slots_needed(p, op, t, ii):
+            mrt[s] = op
+        last_placed[op] = t
+    return time
+
+
+def _finish(p: _Problem, timing: Dict[str, NetTiming], ii: int,
+            rec_mii: int, res_mii: int, start: Dict[OpKey, int],
+            attempts: int, depth: int) -> ModuloSchedule:
+    capture: Dict[int, int] = {}
+    latest = 0
+    for ev in p.captures:
+        capture[ev.signal] = start[ev.producer] + L_OUT + ev.hops
+        latest = max(latest, capture[ev.signal])
+    for op, t in start.items():
+        latest = max(latest, t)
+    hop_time: Dict[Tuple[str, Coord], int] = {}
+    for net_name, nt in sorted(timing.items()):
+        src = p.net_src[net_name]
+        for tile, d in sorted(nt.depth.items()):
+            if tile != nt.driver:
+                hop_time[(net_name, tile)] = start[src] + L_OUT + d
+    sched = ModuloSchedule(ii=ii, rec_mii=rec_mii, res_mii=res_mii,
+                           start=dict(sorted(start.items())),
+                           capture=capture, latency=latest + 1,
+                           attempts=attempts, hop_time=hop_time,
+                           latch_depth=depth, net_timing=dict(timing),
+                           net_src=dict(p.net_src))
+    _check(p, sched)
+    return sched
+
+
+def _check(p: _Problem, s: ModuloSchedule) -> None:
+    """Assert the invariants the simulator relies on."""
+    hold = s.latch_depth * s.ii
+    for e in p.deps:
+        arr = s.start[e.src] + L_OUT + e.hops
+        t = s.start[e.dst]
+        if not (arr + L_LATCH <= t <= arr + hold):
+            raise AssertionError(
+                f"dependence window violated: {e.src}->{e.dst} "
+                f"arr={arr} t={t} II={s.ii} depth={s.latch_depth}")
+    mrt: Dict[Tuple[Coord, int], OpKey] = {}
+    for op, t in s.start.items():
+        for slot in _slots_needed(p, op, t, s.ii):
+            if slot in mrt:
+                raise AssertionError(f"modulo resource conflict at {slot}: "
+                                     f"{mrt[slot]} vs {op}")
+            mrt[slot] = op
