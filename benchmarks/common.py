@@ -30,3 +30,24 @@ def timeit(fn: Callable, *args, repeats: int = 3, **kw) -> Tuple[float, object]:
 
 def emit(name: str, us: float, derived: str) -> None:
     print(f"{name},{us:.1f},{derived}")
+
+
+def write_appcost_jsonl(variants_by_app, out_path: str) -> list:
+    """Dump AppCost records as jsonl for ``results/make_tables.py … fabric``.
+
+    variants_by_app: iterable of (app_name, variants); every
+    ``variant.costs[app_name]`` becomes one row.  Returns the rows.
+    """
+    import dataclasses
+    import json
+    import os
+
+    rows = []
+    for app_name, variants in variants_by_app:
+        for v in variants:
+            rows.append(dataclasses.asdict(v.costs[app_name]))
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    with open(out_path, "w") as f:
+        for r in rows:
+            f.write(json.dumps(r) + "\n")
+    return rows

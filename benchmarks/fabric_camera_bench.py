@@ -1,0 +1,83 @@
+"""Fabric-level camera-pipeline benchmark (paper Fig. 8 app) on an
+auto-fit array (~18x17 for the baseline PE).
+
+The camera pipeline is the largest app in the suite — its baseline
+mapping needs ~300 tiles, which made array-level evaluation minutes of
+annealing budget with full-recompute move scoring (the ROADMAP open
+item).  With the delta-scored placer the whole PE1..PE5 specialization
+sweep runs at array level in seconds; every AppCost record is dumped as
+jsonl consumable by::
+
+    PYTHONPATH=src python results/make_tables.py results/fabric_camera.jsonl fabric
+
+Run:  PYTHONPATH=src python -m benchmarks.fabric_camera_bench
+          [--fast] [--simulate] [--out P]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+from repro.core import specialize_per_app
+from repro.fabric import FabricOptions, FabricSpec
+
+from .common import BENCH_MINING, FAST_MINING, emit, write_appcost_jsonl
+from .fig8_camera_specialization import camera_app
+
+DEFAULT_OUT = os.path.join("results", "fabric_camera.jsonl")
+
+
+def run(out_path: str = DEFAULT_OUT, fast: bool = False,
+        simulate: bool = False) -> int:
+    app = camera_app()
+    mining = FAST_MINING if fast else BENCH_MINING
+    # the spec is a seed: place_and_route auto-fits it per variant, so the
+    # baseline PE lands on the 18x17 grid the ROADMAP calls out and the
+    # specialized variants shrink with their instance counts
+    options = FabricOptions(
+        spec=FabricSpec(rows=2, cols=2),
+        backend="jax", score_mode="delta",
+        chains=2 if fast else 4, sweeps=8 if fast else 16,
+        simulate=simulate)
+    t0 = time.perf_counter()
+    results = specialize_per_app({"camera": app}, mining,
+                                 max_merge=2 if fast else 4,
+                                 fabric=options)
+    us = (time.perf_counter() - t0) * 1e6
+
+    res = results["camera"]
+    rows = write_appcost_jsonl([("camera", res.variants)], out_path)
+
+    for v in res.variants:
+        r = v.costs["camera"]
+        fc = v.fabric_costs["camera"]
+        derived = (f"grid={fc.cols}x{fc.rows};"
+                   f"util={r.fabric_utilization:.2f};"
+                   f"wl={r.fabric_wirelength};"
+                   f"fab_e/op={r.fabric_energy_per_op_pj:.4f}pJ")
+        if simulate:
+            derived += (f";II={r.sim_ii}"
+                        f";sim_e/op={r.sim_energy_per_op_pj:.4f}pJ"
+                        f";verified={r.sim_verified}")
+        emit(f"fabric_camera_{v.name}", res.elapsed_s * 1e6, derived)
+    emit("fabric_camera_jsonl", us, f"rows={len(rows)};path={out_path}")
+    return len(rows)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced mining/annealing budget (CI artifact run)")
+    ap.add_argument("--simulate", action="store_true",
+                    help="also modulo-schedule + cycle-accurately simulate "
+                         "every variant (adds the sim_* columns)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(args.out, fast=args.fast, simulate=args.simulate)
+
+
+if __name__ == "__main__":
+    main()

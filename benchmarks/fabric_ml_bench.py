@@ -15,8 +15,6 @@ Run:  PYTHONPATH=src python -m benchmarks.fabric_ml_bench [--fast] [--out P]
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import json
 import os
 import time
 
@@ -24,7 +22,7 @@ from repro.apps import ml_graphs
 from repro.core import specialize_per_app
 from repro.fabric import FabricOptions, FabricSpec
 
-from .common import BENCH_MINING, FAST_MINING, emit
+from .common import BENCH_MINING, FAST_MINING, emit, write_appcost_jsonl
 
 DEFAULT_OUT = os.path.join("results", "fabric_ml.jsonl")
 
@@ -42,16 +40,10 @@ def run(out_path: str = DEFAULT_OUT, fast: bool = False) -> int:
                                  fabric=options, simulate=True)
     us = (time.perf_counter() - t0) * 1e6
 
-    rows = []
-    app_us = {}                       # measured per-app sweep time
-    for name, res in sorted(results.items()):
-        app_us[name] = res.elapsed_s * 1e6
-        for v in res.variants:
-            rows.append(dataclasses.asdict(v.costs[name]))
-    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
-    with open(out_path, "w") as f:
-        for r in rows:
-            f.write(json.dumps(r) + "\n")
+    app_us = {name: res.elapsed_s * 1e6 for name, res in results.items()}
+    rows = write_appcost_jsonl(
+        [(name, res.variants) for name, res in sorted(results.items())],
+        out_path)
 
     # us_per_call is the measured mine+map+PnR+simulate sweep time of the
     # row's app (shared by its variants), not a fabricated per-row number

@@ -10,8 +10,13 @@ from repro.core import (baseline_datapath, evaluate_mapping, map_application,
 from .common import BENCH_MINING, emit, timeit
 
 
+def camera_app():
+    """The camera pipeline graph — shared with fabric_camera_bench."""
+    return image.build_graph("camera")
+
+
 def run() -> dict:
-    g = image.build_graph("camera")
+    g = camera_app()
     base = baseline_datapath()
     c0 = evaluate_mapping(base, map_application(base, g, "camera"),
                           "baseline")

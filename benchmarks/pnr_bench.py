@@ -1,17 +1,23 @@
-"""Fabric PnR benchmark: JAX-batched annealing vs the single-chain Python
-placer, plus router and HPWL-kernel microbenchmarks.
+"""Fabric PnR benchmark: placer scaling sweep (delta vs full move scoring),
+the JAX-batched vs Python-chain comparison, and router/HPWL microbenches.
 
-The headline comparison holds total annealing work fixed — C chains x S
-sweeps — and times (a) the Python reference run chain-by-chain and (b) the
-JAX engine running all chains in lockstep; at >= 32 chains the batched
-path must win (acceptance criterion).  ``us_per_call`` is microseconds per
-*chain*.
+The headline table anneals synthetic netlists that fill 8x8 .. 64x64
+fabrics with both ``score_mode="delta"`` (incremental rescoring of only
+the nets a swap touches) and ``score_mode="full"`` (recompute all N nets
+per move), verifies the two modes return bit-identical placements, and
+reports the per-sweep speedup — the number that bounds how much design
+space the DSE loop can sweep.  Results land in machine-readable
+``results/BENCH_pnr.json`` so the perf trajectory is tracked across PRs;
+acceptance floor is a >=5x speedup at 32x32 plus a completed 64x64 anneal.
 
-Run:  PYTHONPATH=src python -m benchmarks.pnr_bench
+Run:  PYTHONPATH=src python -m benchmarks.pnr_bench [--smoke] [--out P]
 """
 
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import time
 
 import numpy as np
@@ -19,16 +25,97 @@ import numpy as np
 from repro.apps import image_graphs
 from repro.core import baseline_datapath, map_application
 from repro.core.dse import app_ops
-from repro.fabric import FabricSpec, extract_netlist, lower, place, route_nets
+from repro.fabric import (FabricSpec, extract_netlist, lower, place,
+                          route_nets, synthetic_netlist)
 from repro.fabric.place import anneal_jax, anneal_python
 
 from .common import emit
 
+DEFAULT_OUT = os.path.join("results", "BENCH_pnr.json")
 SWEEPS = 24
 CHAIN_COUNTS = (1, 8, 32)
+SCALE_SIZES = (8, 16, 32, 64)
+#: timing budget for the scaling sweep — per-sweep cost is what a DSE
+#: evaluation pays, so a short fixed budget at a fixed seed is enough
+SCALE_SWEEPS = 2
+SCALE_CHAINS = 1
 
 
-def _problem():
+def _timed_anneal(problem, score_mode: str, *, chains: int, sweeps: int,
+                  seed: int):
+    """(wall seconds, slots, costs) for one steady-state annealer call."""
+    anneal_jax(problem, chains=chains, seed=seed, sweeps=sweeps,
+               score_mode=score_mode)                   # trace + compile
+    t0 = time.perf_counter()
+    slots, costs = anneal_jax(problem, chains=chains, seed=seed + 1,
+                              sweeps=sweeps, score_mode=score_mode)
+    return time.perf_counter() - t0, slots, costs
+
+
+def scaling_sweep(sizes=SCALE_SIZES, *, sweeps: int = SCALE_SWEEPS,
+                  chains: int = SCALE_CHAINS, seed: int = 4) -> list:
+    """Anneal synthetic netlists at each size in both score modes."""
+    records = []
+    for size in sizes:
+        spec = FabricSpec(rows=size, cols=size)
+        problem = lower(synthetic_netlist(spec, seed=seed), spec)
+        rec = {"rows": size, "cols": size,
+               "n_cells": problem.n_pe_cells + problem.n_io_cells,
+               "n_nets": int(np.count_nonzero(
+                   problem.net_mask.any(axis=1))),
+               "sweeps": sweeps, "chains": chains}
+        dt_d, slots_d, costs_d = _timed_anneal(
+            problem, "delta", chains=chains, sweeps=sweeps, seed=seed)
+        dt_f, slots_f, costs_f = _timed_anneal(
+            problem, "full", chains=chains, sweeps=sweeps, seed=seed)
+        rec["delta_wall_s"] = dt_d
+        rec["full_wall_s"] = dt_f
+        rec["delta_us_per_sweep"] = dt_d * 1e6 / sweeps
+        rec["full_us_per_sweep"] = dt_f * 1e6 / sweeps
+        rec["speedup"] = dt_f / dt_d
+        rec["delta_hpwl"] = float(np.min(costs_d))
+        rec["full_hpwl"] = float(np.min(costs_f))
+        rec["bit_identical"] = bool(np.array_equal(slots_d, slots_f)
+                                    and np.array_equal(costs_d, costs_f))
+        # the smoke step's whole point: a delta/full divergence must fail
+        # the run (and CI), not just record False in the report
+        assert rec["bit_identical"], (
+            f"score_mode divergence at {size}x{size}: delta returned "
+            f"hpwl={rec['delta_hpwl']}, full {rec['full_hpwl']}")
+        records.append(rec)
+        emit(f"pnr_scale_{size}x{size}_delta", dt_d * 1e6 / sweeps,
+             f"hpwl={rec['delta_hpwl']:.0f};cells={rec['n_cells']}")
+        emit(f"pnr_scale_{size}x{size}_full", dt_f * 1e6 / sweeps,
+             f"hpwl={rec['full_hpwl']:.0f};"
+             f"speedup={rec['speedup']:.2f}x;"
+             f"identical={rec['bit_identical']}")
+    return records
+
+
+def anneal_64x64(*, chains: int = 2, sweeps: int = 8, seed: int = 4) -> dict:
+    """A realistic-budget 64x64 anneal — only feasible with delta scoring;
+    records the completed run the ROADMAP scaling item asks for."""
+    spec = FabricSpec(rows=64, cols=64)
+    problem = lower(synthetic_netlist(spec, seed=seed), spec)
+    t0 = time.perf_counter()
+    anneal_jax(problem, chains=chains, seed=seed, sweeps=sweeps,
+               score_mode="delta")                      # trace + compile
+    compile_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    _, costs = anneal_jax(problem, chains=chains, seed=seed + 1,
+                          sweeps=sweeps, score_mode="delta")
+    wall = time.perf_counter() - t0
+    rec = {"rows": 64, "cols": 64, "chains": chains, "sweeps": sweeps,
+           "score_mode": "delta", "wall_s": wall,
+           "compile_and_first_run_s": compile_s,
+           "n_cells": problem.n_pe_cells + problem.n_io_cells,
+           "best_hpwl": float(np.min(costs)), "completed": True}
+    emit("pnr_anneal_64x64_delta", wall * 1e6,
+         f"best_hpwl={rec['best_hpwl']:.0f};sweeps={sweeps}x{chains}ch")
+    return rec
+
+
+def _harris_problem():
     app = image_graphs()["harris"]
     dp = baseline_datapath(app_ops(app))
     mapping = map_application(dp, app, "harris")
@@ -37,42 +124,44 @@ def _problem():
     return dp, mapping, app, spec, netlist
 
 
-def run() -> None:
-    dp, mapping, app, spec, netlist = _problem()
+def harris_bench() -> dict:
+    """The original harris-app comparison: python chains vs batched JAX,
+    router timing, and the batched-HPWL microkernel."""
+    dp, mapping, app, spec, netlist = _harris_problem()
     problem = lower(netlist, spec)
+    out = {"python_us_per_chain": {}, "jax_us_per_chain": {}}
 
     # -- python single-chain reference, run `chains` times sequentially ----
-    py_us = {}
     for chains in CHAIN_COUNTS:
         t0 = time.perf_counter()
         costs = [anneal_python(problem, seed=c, sweeps=SWEEPS)[1]
                  for c in range(chains)]
         dt = (time.perf_counter() - t0) * 1e6
-        py_us[chains] = dt / chains
+        out["python_us_per_chain"][chains] = dt / chains
         emit(f"pnr_anneal_python_c{chains}", dt / chains,
              f"best_hpwl={min(costs):.0f}")
 
     # -- jax batched chains (first call includes trace+compile; report the
     # steady-state second call, which is what a DSE sweep pays) ------------
-    jax_us = {}
     for chains in CHAIN_COUNTS:
         anneal_jax(problem, chains=chains, seed=0, sweeps=SWEEPS)  # warmup
         t0 = time.perf_counter()
         _, costs = anneal_jax(problem, chains=chains, seed=1, sweeps=SWEEPS)
         dt = (time.perf_counter() - t0) * 1e6
-        jax_us[chains] = dt / chains
+        out["jax_us_per_chain"][chains] = dt / chains
         emit(f"pnr_anneal_jax_c{chains}", dt / chains,
              f"best_hpwl={float(np.min(costs)):.0f}")
 
     for chains in CHAIN_COUNTS:
-        emit(f"pnr_jax_speedup_c{chains}", jax_us[chains],
-             f"python/jax={py_us[chains] / jax_us[chains]:.2f}x")
+        emit(f"pnr_jax_speedup_c{chains}", out["jax_us_per_chain"][chains],
+             f"python/jax={out['python_us_per_chain'][chains] / out['jax_us_per_chain'][chains]:.2f}x")
 
     # -- router ------------------------------------------------------------
     placement = place(netlist, spec, backend="jax", chains=8, sweeps=SWEEPS)
     t0 = time.perf_counter()
     routes = route_nets(netlist, placement, spec)
     dt = (time.perf_counter() - t0) * 1e6
+    out["route_us"] = dt
     emit("pnr_route_harris", dt,
          f"wl={routes.wirelength};overflow={routes.overflow}")
 
@@ -89,9 +178,41 @@ def run() -> None:
     t0 = time.perf_counter()
     hpwl_batched(pos, pins, mask).block_until_ready()
     dt = (time.perf_counter() - t0) * 1e6
+    out["hpwl_batched_256_us"] = dt
     emit("pnr_hpwl_batched_256", dt, f"nets={pins.shape[0]}")
+    return out
+
+
+def run(out_path: str = DEFAULT_OUT, smoke: bool = False) -> dict:
+    import jax
+
+    report = {"schema": "pnr_bench/v1",
+              "host_backend": jax.default_backend(),
+              "smoke": smoke}
+    if smoke:
+        # CI smoke: 8x8, 2 sweeps, both score modes — proves the delta and
+        # full programs still agree and keeps a perf datapoint per PR
+        report["sizes"] = scaling_sweep((8,), sweeps=2)
+    else:
+        report["sizes"] = scaling_sweep()
+        report["anneal64"] = anneal_64x64()
+        report["harris"] = harris_bench()
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+    emit("pnr_bench_json", 0.0, f"path={out_path}")
+    return report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--smoke", action="store_true",
+                    help="8x8 only, 2 sweeps, both score modes (CI step)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(args.out, smoke=args.smoke)
 
 
 if __name__ == "__main__":
-    print("name,us_per_call,derived")
-    run()
+    main()

@@ -11,9 +11,10 @@ import time
 
 
 def main() -> None:
-    from . import (fabric_ml_bench, fig8_camera_specialization,
-                   fig10_image_pe_ip, fig11_ml_pe, kernel_bench,
-                   mining_bench, pnr_bench, sim_bench, table1_cgra_vs_asic)
+    from . import (fabric_camera_bench, fabric_ml_bench,
+                   fig8_camera_specialization, fig10_image_pe_ip,
+                   fig11_ml_pe, kernel_bench, mining_bench, pnr_bench,
+                   sim_bench, table1_cgra_vs_asic)
     print("name,us_per_call,derived")
     t0 = time.time()
     mining_bench.run()          # pipeline throughput (Sec. IV)
@@ -22,9 +23,10 @@ def main() -> None:
     fig11_ml_pe.run()           # Fig. 11
     table1_cgra_vs_asic.run()   # Table I
     kernel_bench.run()          # TPU-adaptation kernel statistics
-    pnr_bench.run()             # fabric place-and-route (array level)
+    pnr_bench.run()             # placer scaling (delta vs full) + harris
     sim_bench.run()             # time domain: achieved II + golden check
     fabric_ml_bench.run(fast=True)     # Fig. 11 @ 16x16 -> AppCost jsonl
+    fabric_camera_bench.run(fast=True)  # camera @ auto-fit 18x17 fabric
     print(f"# total benchmark wall time: {time.time()-t0:.1f}s",
           file=sys.stderr)
 

@@ -185,7 +185,8 @@ def evaluate_variants(variants: Sequence[PEVariant],
                                   chains=options.chains,
                                   sweeps=options.sweeps,
                                   seed=options.seed, pe_name=v.name,
-                                  hpwl_backend=options.hpwl_backend)
+                                  hpwl_backend=options.hpwl_backend,
+                                  score_mode=options.score_mode)
             v.fabric_costs[app_name] = pnr.cost
             attach_fabric(cost, pnr.cost)
             if options.simulate:

@@ -23,15 +23,16 @@ from ..core.pe import Datapath
 from ..graphir.graph import Graph
 from .arch import FabricSpec, manhattan
 from .cost import FabricCost, attach_fabric, evaluate_fabric
-from .netlist import Cell, Net, Netlist, extract_netlist
+from .netlist import Cell, Net, Netlist, extract_netlist, synthetic_netlist
 from .options import FabricOptions
 from .place import Placement, PlacementProblem, anneal_jax, anneal_python, \
-    lower, place
+    lower, net_incidence, place
 from .route import RouteResult, RoutedNet, route_nets
 
 __all__ = [
     "FabricSpec", "FabricOptions", "manhattan", "Cell", "Net", "Netlist",
-    "extract_netlist", "Placement", "PlacementProblem", "lower", "place",
+    "extract_netlist", "synthetic_netlist", "Placement", "PlacementProblem",
+    "lower", "net_incidence", "place",
     "anneal_jax", "anneal_python", "RouteResult", "RoutedNet", "route_nets",
     "FabricCost", "evaluate_fabric", "attach_fabric", "PnRResult",
     "place_and_route",
@@ -52,14 +53,16 @@ def place_and_route(dp: Datapath, mapping: Mapping, app: Graph,
                     backend: str = "jax", chains: int = 16,
                     sweeps: int = 32, seed: int = 0,
                     auto_size: bool = True, pe_name: str = "PE",
-                    hpwl_backend: str = "jnp") -> PnRResult:
+                    hpwl_backend: str = "jnp",
+                    score_mode: str = "delta") -> PnRResult:
     """Full flow: netlist -> place -> route -> array-level cost."""
     spec = spec or FabricSpec()
     netlist = extract_netlist(mapping, app, spec)
     if auto_size:
         spec = spec.fit(len(netlist.pe_cells), len(netlist.io_cells))
     placement = place(netlist, spec, backend=backend, chains=chains,
-                      sweeps=sweeps, seed=seed, hpwl_backend=hpwl_backend)
+                      sweeps=sweeps, seed=seed, hpwl_backend=hpwl_backend,
+                      score_mode=score_mode)
     routes = route_nets(netlist, placement, spec)
     fc = evaluate_fabric(dp, mapping, netlist, placement, routes, spec,
                          pe_name=pe_name)

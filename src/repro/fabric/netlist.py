@@ -67,6 +67,56 @@ class Netlist:
                 f"{len(self.io_cells)} IOs, {len(self.nets)} nets]")
 
 
+def synthetic_netlist(spec: FabricSpec, *, fill: float = 0.85,
+                      seed: int = 0, max_fanout: int = 3,
+                      io_frac: float = 0.25) -> Netlist:
+    """Random netlist sized to a fabric — the placer-scaling workload.
+
+    Fills ``fill`` of the PE tiles with cells; each PE drives one net to
+    1..max_fanout random PE sinks (one produced signal per cell, like the
+    extractor emits), ``io_frac`` of the perimeter sites split between
+    input streams (each feeding a few PEs) and output taps (extra sinks on
+    existing PE nets).  Deterministic in ``seed``; no application needed,
+    so it scales to any ``rows x cols``.
+    """
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    n_pe = max(2, int(spec.n_pe_tiles * fill))
+    n_io = min(spec.n_io_sites, max(2, int(spec.n_io_sites * io_frac)))
+    n_in = max(1, n_io // 2)
+    n_out = max(1, n_io - n_in)
+
+    nl = Netlist(f"synthetic_{spec.cols}x{spec.rows}_s{seed}")
+    for i in range(n_pe):
+        nl.cells[f"pe{i}"] = Cell(f"pe{i}", "pe", instance=i)
+    for j in range(n_in):
+        nl.cells[f"in{j}"] = Cell(f"in{j}", "io_in", signals=[j])
+    for j in range(n_out):
+        nl.cells[f"out{j}"] = Cell(f"out{j}", "io_out", signals=[n_in + j])
+
+    sinks_of: Dict[int, Set[str]] = {}
+    for i in range(n_pe):
+        k = int(rng.integers(1, max_fanout + 1))
+        # draw one spare so dropping the driver still leaves k sinks
+        cand = rng.choice(n_pe, size=min(k + 1, n_pe), replace=False)
+        sinks = [f"pe{c}" for c in cand if c != i][:k]
+        sinks_of[i] = set(sinks) or {f"pe{(i + 1) % n_pe}"}
+    for j in range(n_out):                 # output taps on random PE nets
+        sinks_of[int(rng.integers(0, n_pe))].add(f"out{j}")
+    for i in range(n_pe):
+        nl.nets.append(Net(f"n{i:05d}", f"pe{i}",
+                           sorted(sinks_of[i]), signal=i))
+    for j in range(n_in):                  # input streams into random PEs
+        k = int(rng.integers(1, max_fanout + 1))
+        cand = rng.choice(n_pe, size=min(k, n_pe), replace=False)
+        nl.nets.append(Net(f"n_in{j:05d}", f"in{j}",
+                           sorted({f"pe{c}" for c in cand}),
+                           signal=n_pe + j))
+    nl.nets.sort(key=lambda n: n.name)
+    return nl
+
+
 def extract_netlist(mapping: Mapping, app: Graph,
                     spec: Optional[FabricSpec] = None,
                     *, io_group: Optional[int] = None) -> Netlist:

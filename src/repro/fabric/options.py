@@ -24,6 +24,11 @@ class FabricOptions:
     hpwl_backend   — placement cost kernel: "jnp" | "pallas"
                      (:func:`repro.kernels.pnr_cost.hpwl_pallas`, interpret
                      mode off-TPU).
+    score_mode     — move scoring: "delta" (incremental — rescore only the
+                     nets the swap touches; the default and the only mode
+                     that scales past ~32x32) | "full" (recompute every
+                     net per move; debug fallback — bit-identical
+                     placements at equal seeds).
     chains/sweeps/seed — annealing budget and determinism.
     simulate       — run the modulo scheduler + cycle-accurate simulator on
                      every (variant, app) mapping and attach measured
@@ -38,6 +43,7 @@ class FabricOptions:
     spec: Optional[FabricSpec] = None
     backend: str = "jax"
     hpwl_backend: str = "jnp"
+    score_mode: str = "delta"
     chains: int = 16
     sweeps: int = 32
     seed: int = 0

@@ -8,9 +8,18 @@ total half-perimeter wirelength.  Two engines share one lowering:
 * ``backend="python"`` — the classic single-chain annealer with incremental
   per-net cost updates (the reference path);
 * ``backend="jax"`` — C independent chains annealed in lockstep, one
-  ``lax.fori_loop`` step proposing one move per chain and re-scoring all
-  chains with the batched HPWL kernel (:mod:`repro.kernels.pnr_cost`).
-  On accelerators the whole sweep stays on-device.
+  ``lax.fori_loop`` step proposing one move per chain and scoring it with
+  the HPWL kernels (:mod:`repro.kernels.pnr_cost`).  On accelerators the
+  whole sweep stays on-device.
+
+Move scoring (``score_mode``): a swap touches only the nets incident to
+the two swapped entities, so the default ``"delta"`` mode carries the
+per-net cost vector through the loop state and rescores just those ≤2K
+nets per move (O(K·D) instead of O(N·D)); ``"full"`` recomputes every
+net's HPWL per move and is kept as the debug fallback.  Both modes see
+identical move schedules and — HPWL values being exactly-representable
+integers — compute bit-identical costs, so they accept/reject the same
+moves and return bit-identical placements for equal seeds.
 
 PE cells live on the rows x cols grid, I/O cells on the perimeter ring;
 moves never cross the two classes, so every intermediate state is legal by
@@ -30,8 +39,8 @@ import numpy as np
 from .arch import Coord, FabricSpec
 from .netlist import Netlist
 
-__all__ = ["PlacementProblem", "Placement", "lower", "anneal_python",
-           "anneal_jax", "place"]
+__all__ = ["PlacementProblem", "Placement", "lower", "net_incidence",
+           "anneal_python", "anneal_jax", "place"]
 
 
 @dataclass
@@ -45,6 +54,9 @@ class PlacementProblem:
     n_io_slots: int
     net_pins: np.ndarray             # (N, D) int32 entity indices (0-padded)
     net_mask: np.ndarray             # (N, D) bool
+    ent_nets: np.ndarray = None      # (E, K) int32 entity -> incident nets,
+    # padded with N (out of range) — the incidence table delta scoring uses
+    # to find the nets a swap touches
 
     @property
     def n_entities(self) -> int:
@@ -99,7 +111,29 @@ def lower(netlist: Netlist, spec: FabricSpec) -> PlacementProblem:
         n_pe_cells=len(pe), n_io_cells=len(io),
         slot_xy=slot_xy,
         n_pe_slots=spec.n_pe_tiles, n_io_slots=spec.n_io_sites,
-        net_pins=net_pins, net_mask=net_mask)
+        net_pins=net_pins, net_mask=net_mask,
+        ent_nets=net_incidence(net_pins, net_mask,
+                               spec.n_pe_tiles + spec.n_io_sites))
+
+
+def net_incidence(net_pins: np.ndarray, net_mask: np.ndarray,
+                  n_entities: int) -> np.ndarray:
+    """Padded entity -> incident-nets table for delta move scoring.
+
+    Returns (E, K) int32 where K is the max nets on any entity; unused
+    entries hold N (one past the last net) so out-of-range gathers and
+    ``mode="drop"`` scatters ignore them.
+    """
+    n_nets = net_pins.shape[0]
+    incident: List[List[int]] = [[] for _ in range(n_entities)]
+    for i in range(n_nets):
+        for e in net_pins[i][net_mask[i]]:
+            incident[int(e)].append(i)
+    k = max(1, max((len(l) for l in incident), default=1))
+    table = np.full((n_entities, k), n_nets, np.int32)
+    for e, l in enumerate(incident):
+        table[e, :len(l)] = l
+    return table
 
 
 def _init_slots(p: PlacementProblem, rng: _random.Random) -> np.ndarray:
@@ -124,6 +158,10 @@ def anneal_python(p: PlacementProblem, *, seed: int = 0, sweeps: int = 48,
     """Single annealing chain; returns (slot_of_entity, final HPWL)."""
     rng = _random.Random(seed)
     slot_of = _init_slots(p, rng)
+    # maintained inverse permutation: occupant lookup is O(1) per move
+    # instead of an O(E) nonzero scan
+    ent_at_slot = np.empty_like(slot_of)
+    ent_at_slot[slot_of] = np.arange(slot_of.shape[0], dtype=slot_of.dtype)
     pins = p.net_pins
     mask = p.net_mask
     xy = p.slot_xy
@@ -162,7 +200,7 @@ def anneal_python(p: PlacementProblem, *, seed: int = 0, sweeps: int = 48,
         a = lo + rng.randrange(n_cells)
         slot_lo = 0 if lo == 0 else p.n_pe_slots
         t = slot_lo + rng.randrange(n_slots)
-        b = int(np.nonzero(slot_of == t)[0][0])
+        b = int(ent_at_slot[t])
         if a == b:
             continue
         touched = sorted(set(nets_of_ent.get(a, []) + nets_of_ent.get(b, [])))
@@ -172,6 +210,7 @@ def anneal_python(p: PlacementProblem, *, seed: int = 0, sweeps: int = 48,
         delta = sum(new_costs.values()) - old
         temp = t0 * (t1 / t0) ** (step / steps)
         if delta <= 0 or rng.random() < math.exp(-delta / max(temp, 1e-9)):
+            ent_at_slot[slot_of[a]], ent_at_slot[slot_of[b]] = a, b
             for i, c in new_costs.items():
                 net_costs[i] = c
             cur += delta
@@ -188,38 +227,42 @@ def anneal_python(p: PlacementProblem, *, seed: int = 0, sweeps: int = 48,
 @functools.lru_cache(maxsize=64)
 def _build_annealer(steps: int, n_pe_c: int, n_io_c: int,
                     n_pe_s: int, n_io_s: int, t0: float, t1: float,
-                    hpwl_backend: str = "jnp"):
+                    hpwl_backend: str = "jnp", score_mode: str = "delta"):
     """Compile one batched annealer per static problem shape.
 
     Caching here (rather than a fresh ``jax.jit`` per call) is what makes a
     DSE sweep cheap: every variant of the same fabric reuses the program.
 
-    hpwl_backend selects the move-scoring kernel: ``"jnp"`` (the jitted
-    jax.numpy reduction) or ``"pallas"`` (the Pallas kernel from
+    hpwl_backend selects the move-scoring kernel family: ``"jnp"`` (jitted
+    jax.numpy reductions) or ``"pallas"`` (the Pallas kernels from
     :mod:`repro.kernels.pnr_cost`, compiled on TPU and interpreted on CPU
-    hosts).  Both compute identical HPWL, so chains accept identical move
-    sequences and the two backends return identical placements.
+    hosts).  score_mode selects full recompute (``"full"``, O(N·D) per
+    move) or incremental rescoring of only the touched nets (``"delta"``,
+    O(K·D) per move).  All four combinations compute identical HPWL, so
+    chains accept identical move sequences and return identical placements.
     """
     import jax
     import jax.numpy as jnp
 
-    from ..kernels.pnr_cost import hpwl, hpwl_pallas
+    from ..kernels.pnr_cost import (hpwl, hpwl_delta, hpwl_delta_pallas,
+                                    hpwl_pallas, net_hpwl)
 
+    interpret = jax.default_backend() != "tpu"
     if hpwl_backend == "pallas":
-        interpret = jax.default_backend() != "tpu"
         score = functools.partial(hpwl_pallas, interpret=interpret)
     elif hpwl_backend == "jnp":
         score = hpwl
     else:
         raise ValueError(f"unknown hpwl_backend {hpwl_backend!r}")
+    if score_mode not in ("delta", "full"):
+        raise ValueError(f"unknown score_mode {score_mode!r}")
 
     n_real = n_pe_c + n_io_c
     p_pe = n_pe_c / n_real
     temps = t0 * (t1 / t0) ** (jnp.arange(steps, dtype=jnp.float32) / steps)
 
-    def chain(key, slot_of0, slot_xy, net_pins, net_mask):
-        def cost(slot_of):
-            return score(slot_xy[slot_of], net_pins, net_mask)
+    def chain(key, slot_of0, slot_xy, net_pins, net_mask, ent_nets):
+        n_nets = net_pins.shape[0]
 
         # draw the whole move schedule up front: one RNG call per stream
         # instead of several threefry hashes inside every loop step
@@ -233,15 +276,9 @@ def _build_annealer(steps: int, n_pe_c: int, n_io_c: int,
                       jax.random.randint(k4, (steps,), 0, n_pe_s),
                       n_pe_s + jax.random.randint(k5, (steps,), 0, n_io_s))
         log_u = jnp.log(jax.random.uniform(k6, (steps,), minval=1e-12))
-        c0 = cost(slot_of0)
 
-        def step(i, state):
-            slot_of, cur, best_slot, best = state
-            ai, ti = a[i], t[i]
-            b = jnp.argmax(slot_of == ti)       # occupant of target slot
-            cand = slot_of.at[ai].set(slot_of[b]).at[b].set(slot_of[ai])
-            new = cost(cand)
-            accept = (new <= cur) | (log_u[i] * temps[i] < cur - new)
+        def accept_and_track(i, accept, cand, new, state_rest):
+            slot_of, cur, best_slot, best = state_rest
             slot_of = jnp.where(accept, cand, slot_of)
             cur = jnp.where(accept, new, cur)
             improved = cur < best
@@ -249,16 +286,66 @@ def _build_annealer(steps: int, n_pe_c: int, n_io_c: int,
             best = jnp.where(improved, cur, best)
             return slot_of, cur, best_slot, best
 
-        _, _, best_slot, best = jax.lax.fori_loop(
-            0, steps, step, (slot_of0, c0, slot_of0, c0))
+        if score_mode == "full":
+            def cost(slot_of):
+                return score(slot_xy[slot_of], net_pins, net_mask)
+
+            def step(i, state):
+                slot_of, cur, best_slot, best = state
+                ai, ti = a[i], t[i]
+                b = jnp.argmax(slot_of == ti)   # occupant of target slot
+                cand = slot_of.at[ai].set(slot_of[b]).at[b].set(slot_of[ai])
+                new = cost(cand)
+                accept = (new <= cur) | (log_u[i] * temps[i] < cur - new)
+                return accept_and_track(i, accept, cand, new, state)
+
+            c0 = cost(slot_of0)
+            _, _, best_slot, best = jax.lax.fori_loop(
+                0, steps, step, (slot_of0, c0, slot_of0, c0))
+            return best_slot, best
+
+        # -- delta mode: per-net cost vector rides in the loop state -------
+        k2_ = ent_nets.shape[1] * 2
+        dup_tri = jnp.tril(jnp.ones((k2_, k2_), bool), k=-1)
+
+        def step(i, state):
+            slot_of, pnc, cur, best_slot, best = state
+            ai, ti = a[i], t[i]
+            b = jnp.argmax(slot_of == ti)       # occupant of target slot
+            cand = slot_of.at[ai].set(slot_of[b]).at[b].set(slot_of[ai])
+            # nets incident to either swapped entity, deduped so a net
+            # touching both contributes its delta exactly once
+            tn = jnp.concatenate([ent_nets[ai], ent_nets[b]])
+            dup = jnp.any((tn[:, None] == tn[None, :]) & dup_tri, axis=1)
+            tn = jnp.where(dup, n_nets, tn)
+            if hpwl_backend == "pallas":
+                new_vals, delta = hpwl_delta_pallas(
+                    slot_xy, slot_of, net_pins, net_mask, pnc, tn,
+                    ai, b, interpret=interpret)
+            else:
+                new_vals, delta = hpwl_delta(slot_xy, cand, net_pins,
+                                             net_mask, pnc, tn)
+            new = cur + delta
+            accept = (new <= cur) | (log_u[i] * temps[i] < cur - new)
+            pnc = jnp.where(accept,
+                            pnc.at[tn].set(new_vals, mode="drop"), pnc)
+            slot_of, cur, best_slot, best = accept_and_track(
+                i, accept, cand, new, (slot_of, cur, best_slot, best))
+            return slot_of, pnc, cur, best_slot, best
+
+        pnc0 = net_hpwl(slot_xy[slot_of0], net_pins, net_mask)
+        c0 = jnp.sum(pnc0)
+        _, _, _, best_slot, best = jax.lax.fori_loop(
+            0, steps, step, (slot_of0, pnc0, c0, slot_of0, c0))
         return best_slot, best
 
-    return jax.jit(jax.vmap(chain, in_axes=(0, 0, None, None, None)))
+    return jax.jit(jax.vmap(chain, in_axes=(0, 0, None, None, None, None)))
 
 
 def anneal_jax(p: PlacementProblem, *, chains: int = 32, seed: int = 0,
                sweeps: int = 48, t0: Optional[float] = None,
-               t1: float = 0.02, hpwl_backend: str = "jnp"
+               t1: float = 0.02, hpwl_backend: str = "jnp",
+               score_mode: str = "delta"
                ) -> Tuple[np.ndarray, np.ndarray]:
     """C independent chains; returns (slot_of (C, E), costs (C,))."""
     import jax
@@ -272,21 +359,26 @@ def anneal_jax(p: PlacementProblem, *, chains: int = 32, seed: int = 0,
 
     run = _build_annealer(steps, p.n_pe_cells, p.n_io_cells,
                           p.n_pe_slots, p.n_io_slots, float(t0), float(t1),
-                          hpwl_backend)
+                          hpwl_backend, score_mode)
     rng = _random.Random(seed)
     init = np.stack([_init_slots(p, rng) for _ in range(chains)])
     keys = jax.random.split(jax.random.PRNGKey(seed), chains)
-    slots, costs = run(keys, init, p.slot_xy, p.net_pins, p.net_mask)
+    ent_nets = p.ent_nets if p.ent_nets is not None else net_incidence(
+        p.net_pins, p.net_mask, p.n_entities)
+    slots, costs = run(keys, init, p.slot_xy, p.net_pins, p.net_mask,
+                       ent_nets)
     return np.asarray(slots), np.asarray(costs)
 
 
 def place(netlist: Netlist, spec: FabricSpec, *, backend: str = "jax",
           chains: int = 32, sweeps: int = 48, seed: int = 0,
           t0: Optional[float] = None, t1: float = 0.02,
-          hpwl_backend: str = "jnp") -> Placement:
+          hpwl_backend: str = "jnp", score_mode: str = "delta") -> Placement:
     """Anneal and return the best chain's placement."""
     if hpwl_backend not in ("jnp", "pallas"):
         raise ValueError(f"unknown hpwl_backend {hpwl_backend!r}")
+    if score_mode not in ("delta", "full"):
+        raise ValueError(f"unknown score_mode {score_mode!r}")
     p = lower(netlist, spec)
 
     if backend == "python":
@@ -294,6 +386,8 @@ def place(netlist: Netlist, spec: FabricSpec, *, backend: str = "jax",
             raise ValueError(
                 "hpwl_backend applies to the jax annealer only; the python "
                 "reference scores moves without the HPWL kernel")
+        # the python reference is inherently incremental; score_mode only
+        # selects between the jax engine's two scoring programs
         chain_results = [anneal_python(p, seed=seed + c, sweeps=sweeps,
                                        t0=t0, t1=t1)
                          for c in range(chains)]
@@ -301,7 +395,8 @@ def place(netlist: Netlist, spec: FabricSpec, *, backend: str = "jax",
         costs = np.asarray([c for _, c in chain_results], np.float32)
     elif backend == "jax":
         slots, costs = anneal_jax(p, chains=chains, seed=seed, sweeps=sweeps,
-                                  t0=t0, t1=t1, hpwl_backend=hpwl_backend)
+                                  t0=t0, t1=t1, hpwl_backend=hpwl_backend,
+                                  score_mode=score_mode)
     else:
         raise ValueError(f"unknown backend {backend!r}")
 

@@ -7,13 +7,24 @@ real pins); a placement is then just a gather + masked min/max reduction —
 the hot numeric loop of PnR, and embarrassingly parallel across annealing
 chains.
 
-Three implementations:
+Full-recompute implementations:
 
 * :func:`hpwl` — jax.numpy, ``jax.jit``-compiled, differentiable-free hot
   path used inside the annealing loop;
 * :func:`hpwl_batched` — vmapped over a leading chain axis;
 * :func:`hpwl_pallas` — Pallas kernel over the padded per-net coordinate
   matrices (interpret mode on CPU hosts; compiles for TPU VMEM tiles).
+
+Delta (incremental) implementations — a swap move touches only the nets
+incident to the two swapped entities, so the annealer's hot loop rescopes
+those ≤2K nets instead of all N:
+
+* :func:`hpwl_delta` — jnp path: gather only the touched nets' pins under
+  the candidate permutation and rescore them;
+* :func:`hpwl_delta_pallas` — fused Pallas variant: pre-swap pin
+  coordinates go to VMEM and the kernel *applies the swap in-kernel*
+  (select on the two swapped entity ids) before reducing the per-net
+  bounding boxes, emitting new per-net costs plus the move delta.
 
 A pure-NumPy oracle (:func:`hpwl_reference`) anchors the tests.
 """
@@ -46,11 +57,9 @@ def hpwl_reference(pos: np.ndarray, net_pins: np.ndarray,
     return total
 
 
-def net_hpwl(pos: jax.Array, net_pins: jax.Array,
-             net_mask: jax.Array) -> jax.Array:
-    """Per-net HPWL.  pos: (E, 2) float; net_pins: (N, D) int (pad entries
-    may hold any valid index); net_mask: (N, D) bool.  Returns (N,)."""
-    xy = pos[net_pins]                       # (N, D, 2)
+def net_hpwl_from_xy(xy: jax.Array, net_mask: jax.Array) -> jax.Array:
+    """Per-net HPWL from already-gathered pin coordinates.
+    xy: (N, D, 2) float; net_mask: (N, D) bool.  Returns (N,)."""
     x, y = xy[..., 0], xy[..., 1]
     xmin = jnp.min(jnp.where(net_mask, x, _BIG), axis=-1)
     xmax = jnp.max(jnp.where(net_mask, x, -_BIG), axis=-1)
@@ -58,6 +67,13 @@ def net_hpwl(pos: jax.Array, net_pins: jax.Array,
     ymax = jnp.max(jnp.where(net_mask, y, -_BIG), axis=-1)
     valid = jnp.any(net_mask, axis=-1)
     return jnp.where(valid, (xmax - xmin) + (ymax - ymin), 0.0)
+
+
+def net_hpwl(pos: jax.Array, net_pins: jax.Array,
+             net_mask: jax.Array) -> jax.Array:
+    """Per-net HPWL.  pos: (E, 2) float; net_pins: (N, D) int (pad entries
+    may hold any valid index); net_mask: (N, D) bool.  Returns (N,)."""
+    return net_hpwl_from_xy(pos[net_pins], net_mask)
 
 
 @jax.jit
@@ -95,18 +111,119 @@ def hpwl_pallas(pos: jax.Array, net_pins: jax.Array, net_mask: jax.Array,
     cheap; the reduction is the VPU-shaped part), pads the pin matrices to
     TPU tile multiples (8 x 128 for float32), and reduces per net.
     """
-    from .tiling import LANE, SUBLANE, round_up
+    from .tiling import pad2d, round_up, SUBLANE
 
     n, d = net_pins.shape
     xy = pos[net_pins].astype(jnp.float32)           # (N, D, 2)
-    n_pad, d_pad = round_up(n, SUBLANE), round_up(d, LANE)
-    x = jnp.zeros((n_pad, d_pad), jnp.float32).at[:n, :d].set(xy[..., 0])
-    y = jnp.zeros((n_pad, d_pad), jnp.float32).at[:n, :d].set(xy[..., 1])
-    m = jnp.zeros((n_pad, d_pad), jnp.int32).at[:n, :d].set(
-        net_mask.astype(jnp.int32))
+    x = pad2d(xy[..., 0])
+    y = pad2d(xy[..., 1])
+    m = pad2d(net_mask.astype(jnp.int32))
     per_net = pl.pallas_call(
         _hpwl_kernel,
-        out_shape=jax.ShapeDtypeStruct((n_pad, 1), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((round_up(n, SUBLANE), 1),
+                                       jnp.float32),
         interpret=interpret,
     )(x, y, m)
     return jnp.sum(per_net)
+
+
+# ---------------------------------------------------------------------------
+# Delta rescoring: only the nets touched by a swap move.
+# ---------------------------------------------------------------------------
+def _touched_view(net_pins: jax.Array, net_mask: jax.Array,
+                  per_net_cost: jax.Array, touched: jax.Array):
+    """(pins, mask, old) restricted to the touched nets.
+
+    ``touched`` holds net indices padded with ``N`` (out of range) for
+    unused / duplicate entries; those rows come back fully masked with an
+    old cost of 0, so they drop out of every reduction.
+    """
+    n = net_pins.shape[0]
+    valid = touched < n
+    tc = jnp.minimum(touched, n - 1)
+    pins = net_pins[tc]                               # (T, D)
+    mask = net_mask[tc] & valid[:, None]
+    old = jnp.where(valid, per_net_cost[tc], 0.0)
+    return pins, mask, old
+
+
+def hpwl_delta(slot_xy: jax.Array, cand_slot_of: jax.Array,
+               net_pins: jax.Array, net_mask: jax.Array,
+               per_net_cost: jax.Array, touched: jax.Array):
+    """Rescore only the ``touched`` nets under a candidate permutation.
+
+    slot_xy: (E, 2) slot coordinates; cand_slot_of: (E,) candidate
+    entity -> slot permutation; per_net_cost: (N,) current per-net HPWL;
+    touched: (T,) int32 net indices (pad/duplicate entries hold N).
+
+    Returns ``(new_vals, delta)``: ``new_vals[t]`` is the candidate HPWL
+    of net ``touched[t]`` (0 for padding) and ``delta`` the scalar move
+    cost change.  O(T * D) instead of O(N * D).
+    """
+    pins, mask, old = _touched_view(net_pins, net_mask, per_net_cost,
+                                    touched)
+    xy = slot_xy[cand_slot_of[pins]]                  # (T, D, 2)
+    new_vals = net_hpwl_from_xy(xy, mask)
+    return new_vals, jnp.sum(new_vals - old)
+
+
+def _hpwl_delta_kernel(x_ref, y_ref, p_ref, m_ref, old_ref, ab_ref, sw_ref,
+                       new_ref, delta_ref):
+    """Fused swap + bounding-box reduction.
+
+    x/y hold the *pre-swap* pin coordinates; ab the two swapped entity
+    ids; sw their *post-swap* (x, y) positions.  The swap is applied
+    in-kernel (two selects on the resident coordinate tiles), then the
+    per-net boxes reduce as in :func:`_hpwl_kernel`.
+    """
+    p = p_ref[...]
+    a, b = ab_ref[0, 0], ab_ref[0, 1]
+    x = x_ref[...]
+    y = y_ref[...]
+    x = jnp.where(p == a, sw_ref[0, 0], jnp.where(p == b, sw_ref[1, 0], x))
+    y = jnp.where(p == a, sw_ref[0, 1], jnp.where(p == b, sw_ref[1, 1], y))
+    m = m_ref[...] != 0
+    xmin = jnp.min(jnp.where(m, x, _BIG), axis=1, keepdims=True)
+    xmax = jnp.max(jnp.where(m, x, -_BIG), axis=1, keepdims=True)
+    ymin = jnp.min(jnp.where(m, y, _BIG), axis=1, keepdims=True)
+    ymax = jnp.max(jnp.where(m, y, -_BIG), axis=1, keepdims=True)
+    valid = jnp.any(m, axis=1, keepdims=True)
+    new = jnp.where(valid, (xmax - xmin) + (ymax - ymin), 0.0)
+    new_ref[...] = new
+    delta_ref[...] = jnp.sum(new - old_ref[...], keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def hpwl_delta_pallas(slot_xy: jax.Array, slot_of: jax.Array,
+                      net_pins: jax.Array, net_mask: jax.Array,
+                      per_net_cost: jax.Array, touched: jax.Array,
+                      ent_a: jax.Array, ent_b: jax.Array,
+                      *, interpret: bool = True):
+    """Same contract as :func:`hpwl_delta`, but scores *the swap of
+    ent_a/ent_b applied to slot_of* without materializing the candidate
+    permutation: the touched nets' pre-swap coordinates stay resident in
+    VMEM and the kernel applies the swap before reducing.
+    """
+    from .tiling import pad2d, round_up, SUBLANE
+
+    pins, mask, old = _touched_view(net_pins, net_mask, per_net_cost,
+                                    touched)
+    t = pins.shape[0]
+    t_pad = round_up(t, SUBLANE)
+    xy = slot_xy[slot_of[pins]].astype(jnp.float32)   # pre-swap coords
+    x = pad2d(xy[..., 0])
+    y = pad2d(xy[..., 1])
+    p = pad2d(pins.astype(jnp.int32), fill=-1)        # -1 never matches
+    m = pad2d(mask.astype(jnp.int32))
+    old_p = jnp.zeros((t_pad, 1), jnp.float32).at[:t, 0].set(old)
+    ab = jnp.stack([ent_a, ent_b]).astype(jnp.int32)[None]        # (1, 2)
+    # post-swap positions: each entity lands on the other's slot
+    sw = jnp.stack([slot_xy[slot_of[ent_b]],
+                    slot_xy[slot_of[ent_a]]]).astype(jnp.float32)  # (2, 2)
+    new_p, delta = pl.pallas_call(
+        _hpwl_delta_kernel,
+        out_shape=(jax.ShapeDtypeStruct((t_pad, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((1, 1), jnp.float32)),
+        interpret=interpret,
+    )(x, y, p, m, old_p, ab, sw)
+    return new_p[:t, 0], delta[0, 0]

@@ -10,3 +10,20 @@ LANE = 128
 def round_up(n: int, k: int) -> int:
     """Smallest multiple of k that is >= max(n, k)."""
     return max(k, (n + k - 1) // k * k)
+
+
+def pad2d(x, fill=0):
+    """Zero-copy-where-possible pad of a 2-D array to the float32 VMEM tile
+    grid (rows to a SUBLANE multiple, cols to a LANE multiple).
+
+    Returns the padded array; ``fill`` seeds the padding region (0 for data
+    whose pad rows must reduce to the masked identity).
+    """
+    import jax.numpy as jnp
+
+    r, c = x.shape
+    rp, cp = round_up(r, SUBLANE), round_up(c, LANE)
+    if (rp, cp) == (r, c):
+        return x
+    out = jnp.full((rp, cp), fill, dtype=x.dtype)
+    return out.at[:r, :c].set(x)

@@ -7,10 +7,12 @@ from repro.apps import image_graphs
 from repro.core import baseline_datapath, map_application
 from repro.core.dse import app_ops
 from repro.fabric import (FabricSpec, extract_netlist, place,
-                          place_and_route, route_nets)
-from repro.fabric.place import anneal_jax, anneal_python, lower
-from repro.kernels.pnr_cost import (hpwl, hpwl_batched, hpwl_pallas,
-                                    hpwl_reference)
+                          place_and_route, route_nets, synthetic_netlist)
+from repro.fabric.place import anneal_jax, anneal_python, lower, \
+    net_incidence
+from repro.kernels.pnr_cost import (hpwl, hpwl_batched, hpwl_delta,
+                                    hpwl_delta_pallas, hpwl_pallas,
+                                    hpwl_reference, net_hpwl)
 
 SPEC = FabricSpec(rows=8, cols=8)
 
@@ -189,6 +191,106 @@ def test_jax_annealer_improves_over_initial(harris):
     py_slot, py_cost = anneal_python(problem, seed=0, sweeps=8)
     # both engines land in the same quality ballpark on this small problem
     assert min(costs) < 2.0 * py_cost + 1.0
+
+
+# ---------------------------------------------------------------------------
+# delta (incremental) move scoring
+# ---------------------------------------------------------------------------
+def test_net_incidence_table(harris):
+    _, _, _, nl = harris
+    p = lower(nl, SPEC)
+    n_nets = p.net_pins.shape[0]
+    table = p.ent_nets
+    assert table.shape[0] == p.n_entities
+    for e in range(p.n_entities):
+        want = sorted(i for i in range(n_nets)
+                      if e in p.net_pins[i][p.net_mask[i]])
+        got = sorted(int(i) for i in table[e] if i < n_nets)
+        assert got == want, e
+    # padding entries are exactly N so out-of-range gathers drop them
+    assert table.min() >= 0 and table.max() <= n_nets
+
+
+@pytest.mark.parametrize("kernel", ["jnp", "pallas"])
+def test_hpwl_delta_matches_full_recompute(harris, kernel):
+    import jax.numpy as jnp
+
+    _, _, _, nl = harris
+    p = lower(nl, SPEC)
+    n_nets = p.net_pins.shape[0]
+    rng = np.random.default_rng(11)
+    slot_of = np.concatenate([
+        rng.permutation(p.n_pe_slots),
+        p.n_pe_slots + rng.permutation(p.n_io_slots)]).astype(np.int32)
+    pnc = np.asarray(net_hpwl(p.slot_xy[slot_of], p.net_pins, p.net_mask))
+    k = p.ent_nets.shape[1]
+    for _ in range(10):
+        a, b = rng.integers(0, p.n_entities, 2)
+        cand = slot_of.copy()
+        cand[a], cand[b] = cand[b], cand[a]
+        touched = np.full(2 * k, n_nets, np.int32)
+        nets = sorted({int(i) for i in np.concatenate(
+            [p.ent_nets[a], p.ent_nets[b]]) if i < n_nets})
+        touched[:len(nets)] = nets
+        if kernel == "jnp":
+            new_vals, delta = hpwl_delta(
+                jnp.asarray(p.slot_xy), jnp.asarray(cand),
+                jnp.asarray(p.net_pins), jnp.asarray(p.net_mask),
+                jnp.asarray(pnc), jnp.asarray(touched))
+        else:
+            new_vals, delta = hpwl_delta_pallas(
+                jnp.asarray(p.slot_xy), jnp.asarray(slot_of),
+                jnp.asarray(p.net_pins), jnp.asarray(p.net_mask),
+                jnp.asarray(pnc), jnp.asarray(touched),
+                jnp.int32(a), jnp.int32(b), interpret=True)
+        want = hpwl_reference(p.slot_xy[cand], p.net_pins, p.net_mask)
+        assert pnc.sum() + float(delta) == pytest.approx(want)
+        # returned per-net values are the candidate costs of the touched nets
+        cand_pnc = np.asarray(net_hpwl(p.slot_xy[cand], p.net_pins,
+                                       p.net_mask))
+        for t, i in enumerate(nets):
+            assert float(new_vals[t]) == pytest.approx(cand_pnc[i])
+
+
+def test_delta_full_bit_identical_16x16():
+    """Deterministic regression: at 16x16 every (score_mode, hpwl_backend)
+    combination accepts the same move sequence and returns bit-identical
+    placements and costs."""
+    spec = FabricSpec(rows=16, cols=16)
+    p = lower(synthetic_netlist(spec, seed=2), spec)
+    runs = {}
+    for mode in ("delta", "full"):
+        for hb in ("jnp", "pallas"):
+            runs[(mode, hb)] = anneal_jax(p, chains=2, seed=7, sweeps=2,
+                                          hpwl_backend=hb, score_mode=mode)
+    ref_slots, ref_costs = runs[("full", "jnp")]
+    for key, (slots, costs) in runs.items():
+        assert np.array_equal(slots, ref_slots), key
+        assert np.array_equal(costs, ref_costs), key
+    # and the reported costs are real HPWLs of the returned states
+    for c in range(ref_slots.shape[0]):
+        assert float(ref_costs[c]) == pytest.approx(hpwl_reference(
+            p.slot_xy[ref_slots[c]], p.net_pins, p.net_mask))
+
+
+def test_place_rejects_unknown_score_mode(harris):
+    _, _, _, nl = harris
+    with pytest.raises(ValueError, match="score_mode"):
+        place(nl, SPEC, score_mode="incremental")
+
+
+def test_synthetic_netlist_is_deterministic_and_legal():
+    spec = FabricSpec(rows=8, cols=8)
+    a = synthetic_netlist(spec, seed=5)
+    b = synthetic_netlist(spec, seed=5)
+    assert [(n.name, n.driver, n.sinks) for n in a.nets] == \
+           [(n.name, n.driver, n.sinks) for n in b.nets]
+    assert len(a.pe_cells) <= spec.n_pe_tiles
+    assert len(a.io_cells) <= spec.n_io_sites
+    for n in a.nets:
+        assert n.driver not in n.sinks and n.degree >= 2
+        assert n.driver in a.cells
+        assert all(s in a.cells for s in n.sinks)
 
 
 # ---------------------------------------------------------------------------

@@ -114,6 +114,34 @@ def test_int8_compression_error_bound(vals):
 
 
 # ---------------------------------------------------------------------------
+# placer: delta move scoring is bit-identical to full recompute
+# ---------------------------------------------------------------------------
+@settings(max_examples=8, deadline=None)
+@given(net_seed=st.integers(0, 10_000),
+       fill=st.floats(0.25, 0.95),
+       fanout=st.integers(1, 5),
+       anneal_seed=st.integers(0, 1_000))
+def test_property_delta_equals_full_recompute(net_seed, fill, fanout,
+                                              anneal_seed):
+    """Random netlists, random seeds: the delta-scored annealer accepts
+    exactly the moves the full-recompute annealer accepts, so placements
+    and costs come back bit-identical."""
+    from repro.fabric import FabricSpec, synthetic_netlist
+    from repro.fabric.place import anneal_jax, lower
+
+    spec = FabricSpec(rows=4, cols=4)
+    nl = synthetic_netlist(spec, fill=fill, seed=net_seed,
+                           max_fanout=fanout)
+    p = lower(nl, spec)
+    s_d, c_d = anneal_jax(p, chains=2, seed=anneal_seed, sweeps=3,
+                          score_mode="delta")
+    s_f, c_f = anneal_jax(p, chains=2, seed=anneal_seed, sweeps=3,
+                          score_mode="full")
+    assert np.array_equal(s_d, s_f)
+    assert np.array_equal(c_d, c_f)
+
+
+# ---------------------------------------------------------------------------
 # time-domain subsystem: random graphs simulate bit-exactly
 # ---------------------------------------------------------------------------
 _SIM_OPS = ["add", "sub", "mul", "min", "max"]
