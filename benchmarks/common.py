@@ -32,22 +32,16 @@ def emit(name: str, us: float, derived: str) -> None:
     print(f"{name},{us:.1f},{derived}")
 
 
-def write_appcost_jsonl(variants_by_app, out_path: str) -> list:
-    """Dump AppCost records as jsonl for ``results/make_tables.py … fabric``.
+def write_records_jsonl(result, out_path: str) -> list:
+    """Dump an :class:`repro.explore.ExploreResult` as schema-versioned
+    jsonl (consumable by ``results/make_tables.py … fabric``).
 
-    variants_by_app: iterable of (app_name, variants); every
-    ``variant.costs[app_name]`` becomes one row.  Returns the rows.
+    Returns the row dicts.  The ad-hoc AppCost plumbing this replaces
+    lives on as the AppCost column subset of every
+    :class:`repro.explore.ExploreRecord`.
     """
-    import dataclasses
-    import json
-    import os
+    from repro.explore import to_jsonl
 
-    rows = []
-    for app_name, variants in variants_by_app:
-        for v in variants:
-            rows.append(dataclasses.asdict(v.costs[app_name]))
-    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
-    with open(out_path, "w") as f:
-        for r in rows:
-            f.write(json.dumps(r) + "\n")
-    return rows
+    records = result.records()
+    to_jsonl(records, out_path)
+    return [r.to_dict() for r in records]

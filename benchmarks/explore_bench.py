@@ -1,0 +1,120 @@
+"""Batched-vs-serial pnr stage benchmark on the Fig. 11 ML suite.
+
+The pre-``repro.explore`` driver placed every (variant, app) pair in its
+own annealing call: one jit compile per problem shape plus one device
+dispatch per pair.  The Explorer's ``pnr`` stage gathers all pairs, pads
+them to bucket shapes, and anneals every bucket-compatible group's chains
+in ONE JAX dispatch — so a whole exploration pays a couple of compiles
+instead of one per pair.
+
+Both modes run from a shared upstream store (mine/rank/merge/map already
+done — this isolates the pnr stage, the claim under test) and from cold
+annealer caches (a fresh exploration's real cost).  Results land in
+``results/BENCH_explore.json`` (committed + CI artifact).
+
+Run:  PYTHONPATH=src python -m benchmarks.explore_bench [--smoke] [--out P]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+from repro.apps import ml_graphs
+from repro.explore import ExploreConfig, Explorer
+from repro.fabric import FabricOptions, FabricSpec
+
+from .common import BENCH_MINING, FAST_MINING, emit
+
+DEFAULT_OUT = os.path.join("results", "BENCH_explore.json")
+
+
+def run(out_path: str = DEFAULT_OUT, smoke: bool = False) -> dict:
+    apps = ml_graphs()
+    fabric = FabricOptions(
+        spec=FabricSpec(rows=16, cols=16), backend="jax",
+        chains=4 if smoke else 8, sweeps=8 if smoke else 24)
+    cfg = ExploreConfig(mode="per_app",
+                        mining=FAST_MINING if smoke else BENCH_MINING,
+                        max_merge=2 if smoke else 3, fabric=fabric)
+
+    # shared upstream artifacts: both modes see identical mappings
+    base = Explorer(apps, cfg)
+    base.map()
+
+    def timed_pnr(pnr_batch: str):
+        # fresh annealer programs per mode (cold caches emulate a fresh
+        # exploration); the memo store is shared for the upstream stages
+        # but pnr keys include pnr_batch, so each mode places from scratch
+        import importlib
+        # repro.fabric re-exports the place() *function*, shadowing the
+        # submodule attribute — resolve the module explicitly
+        place_mod = importlib.import_module("repro.fabric.place")
+        place_mod._build_annealer.cache_clear()
+        place_mod._build_batch_annealer.cache_clear()
+        ex = base.with_config(pnr_batch=pnr_batch)
+        before = ex.stats["pnr_dispatch"]     # the stats Counter is shared
+        t0 = time.perf_counter()
+        pnrs = ex.pnr()
+        dt = time.perf_counter() - t0
+        return dt, pnrs, ex.stats["pnr_dispatch"] - before
+
+    serial_s, serial_pnrs, serial_disp = timed_pnr("serial")
+    grouped_s, grouped_pnrs, grouped_disp = timed_pnr("grouped")
+
+    pairs = len(serial_pnrs)
+    assert len(grouped_pnrs) == pairs
+    # both modes must produce equally valid arrays: every net routed on a
+    # legally fitted grid
+    for pnrs in (serial_pnrs, grouped_pnrs):
+        for pnr in pnrs.values():
+            assert pnr.routes.success, "routing overflow in benchmark run"
+
+    speedup = serial_s / max(grouped_s, 1e-9)
+    result = {
+        "bench": "explore_pnr_batch",
+        "suite": "fig11_ml@16x16",
+        "mode": "smoke" if smoke else "full",
+        "pairs": pairs,
+        "chains": fabric.chains,
+        "sweeps": fabric.sweeps,
+        "serial_dispatches": serial_disp,
+        "grouped_dispatches": grouped_disp,
+        "serial_s": round(serial_s, 3),
+        "grouped_s": round(grouped_s, 3),
+        "speedup": round(speedup, 2),
+        "note": "pnr stage only, shared upstream artifacts, cold annealer "
+                "caches (includes jit compiles — the cost of a fresh "
+                "exploration)",
+    }
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=2)
+        f.write("\n")
+
+    emit("explore_pnr_serial", serial_s * 1e6,
+         f"pairs={pairs};dispatches={result['serial_dispatches']}")
+    emit("explore_pnr_grouped", grouped_s * 1e6,
+         f"pairs={pairs};dispatches={result['grouped_dispatches']}")
+    emit("explore_pnr_speedup", grouped_s * 1e6,
+         f"{speedup:.2f}x (target >=3x);out={out_path}")
+    if smoke:
+        assert speedup > 1.0, (
+            f"batched pnr slower than serial ({speedup:.2f}x)")
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced budget + speedup>1 assertion (CI)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(args.out, smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -3,10 +3,11 @@ auto-fit array (~18x17 for the baseline PE).
 
 The camera pipeline is the largest app in the suite — its baseline
 mapping needs ~300 tiles, which made array-level evaluation minutes of
-annealing budget with full-recompute move scoring (the ROADMAP open
-item).  With the delta-scored placer the whole PE1..PE5 specialization
-sweep runs at array level in seconds; every AppCost record is dumped as
-jsonl consumable by::
+annealing budget with full-recompute move scoring (a former ROADMAP open
+item).  With the delta-scored placer driven through the staged
+exploration pipeline the whole PE1..PE5 specialization sweep runs at
+array level in seconds; every record is dumped as schema-versioned jsonl
+consumable by::
 
     PYTHONPATH=src python results/make_tables.py results/fabric_camera.jsonl fabric
 
@@ -20,10 +21,10 @@ import argparse
 import os
 import time
 
-from repro.core import specialize_per_app
+from repro.explore import ExploreConfig, Explorer
 from repro.fabric import FabricOptions, FabricSpec
 
-from .common import BENCH_MINING, FAST_MINING, emit, write_appcost_jsonl
+from .common import BENCH_MINING, FAST_MINING, emit, write_records_jsonl
 from .fig8_camera_specialization import camera_app
 
 DEFAULT_OUT = os.path.join("results", "fabric_camera.jsonl")
@@ -32,23 +33,25 @@ DEFAULT_OUT = os.path.join("results", "fabric_camera.jsonl")
 def run(out_path: str = DEFAULT_OUT, fast: bool = False,
         simulate: bool = False) -> int:
     app = camera_app()
-    mining = FAST_MINING if fast else BENCH_MINING
-    # the spec is a seed: place_and_route auto-fits it per variant, so the
+    # the spec is a seed: the pnr stage auto-fits it per variant, so the
     # baseline PE lands on the 18x17 grid the ROADMAP calls out and the
     # specialized variants shrink with their instance counts
-    options = FabricOptions(
-        spec=FabricSpec(rows=2, cols=2),
-        backend="jax", score_mode="delta",
-        chains=2 if fast else 4, sweeps=8 if fast else 16,
-        simulate=simulate)
+    cfg = ExploreConfig(
+        mode="per_app",
+        mining=FAST_MINING if fast else BENCH_MINING,
+        max_merge=2 if fast else 4,
+        fabric=FabricOptions(
+            spec=FabricSpec(rows=2, cols=2),
+            backend="jax", score_mode="delta",
+            chains=2 if fast else 4, sweeps=8 if fast else 16,
+            simulate=simulate))
+    ex = Explorer({"camera": app}, cfg)
     t0 = time.perf_counter()
-    results = specialize_per_app({"camera": app}, mining,
-                                 max_merge=2 if fast else 4,
-                                 fabric=options)
+    result = ex.run()
     us = (time.perf_counter() - t0) * 1e6
 
-    res = results["camera"]
-    rows = write_appcost_jsonl([("camera", res.variants)], out_path)
+    res = result.results["camera"]
+    rows = write_records_jsonl(result, out_path)
 
     for v in res.variants:
         r = v.costs["camera"]

@@ -1,8 +1,10 @@
 """Fabric-level ML-suite benchmark (paper Fig. 11 apps) on a 16x16 array.
 
-Runs the per-app DSE sweep for the four ML kernels (Conv, Block, StrC, DS)
-with array-level place-and-route AND time-domain simulation enabled, then
-dumps every AppCost record as jsonl consumable by::
+Runs the staged exploration pipeline for the four ML kernels (Conv, Block,
+StrC, DS) with array-level place-and-route AND time-domain simulation
+enabled — the ``pnr`` stage anneals all (variant, app) placements of a
+bucket signature in one JAX dispatch — then dumps every record as
+schema-versioned jsonl consumable by::
 
     PYTHONPATH=src python results/make_tables.py results/fabric_ml.jsonl fabric
 
@@ -19,41 +21,44 @@ import os
 import time
 
 from repro.apps import ml_graphs
-from repro.core import specialize_per_app
+from repro.explore import ExploreConfig, Explorer
 from repro.fabric import FabricOptions, FabricSpec
 
-from .common import BENCH_MINING, FAST_MINING, emit, write_appcost_jsonl
+from .common import BENCH_MINING, FAST_MINING, emit, write_records_jsonl
 
 DEFAULT_OUT = os.path.join("results", "fabric_ml.jsonl")
 
 
 def run(out_path: str = DEFAULT_OUT, fast: bool = False) -> int:
     apps = ml_graphs()
-    mining = FAST_MINING if fast else BENCH_MINING
-    options = FabricOptions(
-        spec=FabricSpec(rows=16, cols=16),
-        backend="jax", chains=4 if fast else 8, sweeps=16 if fast else 24,
-        simulate=True)
+    cfg = ExploreConfig(
+        mode="per_app",
+        mining=FAST_MINING if fast else BENCH_MINING,
+        max_merge=2 if fast else 3,
+        fabric=FabricOptions(
+            spec=FabricSpec(rows=16, cols=16),
+            backend="jax", chains=4 if fast else 8,
+            sweeps=16 if fast else 24, simulate=True))
+    ex = Explorer(apps, cfg)
     t0 = time.perf_counter()
-    results = specialize_per_app(apps, mining,
-                                 max_merge=2 if fast else 3,
-                                 fabric=options, simulate=True)
+    result = ex.run()
     us = (time.perf_counter() - t0) * 1e6
 
-    app_us = {name: res.elapsed_s * 1e6 for name, res in results.items()}
-    rows = write_appcost_jsonl(
-        [(name, res.variants) for name, res in sorted(results.items())],
-        out_path)
+    rows = write_records_jsonl(result, out_path)
 
-    # us_per_call is the measured mine+map+PnR+simulate sweep time of the
-    # row's app (shared by its variants), not a fabricated per-row number
+    # us_per_call is the whole-suite exploration time: the pnr stage
+    # anneals pairs of all four apps in shared dispatches, so per-app wall
+    # time is no longer separable
+    suite_us = result.elapsed_s * 1e6
     for r in rows:
-        emit(f"fabric_ml_{r['app']}_{r['pe_name']}", app_us[r["app"]],
+        emit(f"fabric_ml_{r['app']}_{r['pe_name']}", suite_us,
              f"II={r['sim_ii']};tput={r['sim_throughput_gops']:.1f}Gops;"
              f"fab_e/op={r['fabric_energy_per_op_pj']:.4f}pJ;"
              f"sim_e/op={r['sim_energy_per_op_pj']:.4f}pJ;"
              f"verified={r['sim_verified']}")
-    emit("fabric_ml_jsonl", us, f"rows={len(rows)};path={out_path}")
+    emit("fabric_ml_jsonl", us,
+         f"rows={len(rows)};path={out_path};"
+         f"pnr_dispatches={ex.stats['pnr_dispatch']}")
     return len(rows)
 
 

@@ -5,8 +5,8 @@ apps on PE IP (specialized for the whole image domain) vs PE Spec
 from __future__ import annotations
 
 from repro.apps import image_graphs
-from repro.core import (baseline_datapath, domain_pe, evaluate_mapping,
-                        map_application, specialize_per_app)
+from repro.core import baseline_datapath, evaluate_mapping, map_application
+from repro.explore import ExploreConfig, Explorer
 
 from .common import BENCH_MINING, emit, timeit
 
@@ -17,12 +17,15 @@ def run() -> dict:
     base_costs = {n: evaluate_mapping(base, map_application(base, g, n),
                                       "baseline") for n, g in apps.items()}
 
-    us_ip, ip = timeit(lambda: domain_pe(apps, BENCH_MINING,
-                                         per_app_subgraphs=2,
-                                         domain_name="PE_IP"), repeats=1)
-    us_sp, per_app = timeit(lambda: specialize_per_app(apps, BENCH_MINING,
-                                                       max_merge=3),
-                            repeats=1)
+    # one Explorer memo store: the per-app sweep reuses the domain run's
+    # mining/ranking artifacts instead of re-mining all four apps
+    ex = Explorer(apps, ExploreConfig(mode="domain", mining=BENCH_MINING,
+                                      per_app_subgraphs=2,
+                                      domain_name="PE_IP"))
+    us_ip, ip = timeit(lambda: ex.run().results["PE_IP"], repeats=1)
+    us_sp, per_app = timeit(
+        lambda: ex.with_config(mode="per_app", max_merge=3).run().results,
+        repeats=1)
 
     out = {}
     for name in sorted(apps):

@@ -4,8 +4,8 @@ StrC, DS) on PE ML (domain) vs PE Spec (per-kernel) vs baseline."""
 from __future__ import annotations
 
 from repro.apps import ml_graphs
-from repro.core import (baseline_datapath, domain_pe, evaluate_mapping,
-                        map_application, specialize_per_app)
+from repro.core import baseline_datapath, evaluate_mapping, map_application
+from repro.explore import ExploreConfig, Explorer
 
 from .common import BENCH_MINING, emit, timeit
 
@@ -15,12 +15,14 @@ def run() -> dict:
     base = baseline_datapath()
     base_costs = {n: evaluate_mapping(base, map_application(base, g, n),
                                       "baseline") for n, g in apps.items()}
-    us_ml, ml = timeit(lambda: domain_pe(apps, BENCH_MINING,
-                                         per_app_subgraphs=2,
-                                         domain_name="PE_ML"), repeats=1)
-    us_sp, per_app = timeit(lambda: specialize_per_app(apps, BENCH_MINING,
-                                                       max_merge=3),
-                            repeats=1)
+    # shared memo store: the per-kernel sweep reuses the PE ML run's mining
+    ex = Explorer(apps, ExploreConfig(mode="domain", mining=BENCH_MINING,
+                                      per_app_subgraphs=2,
+                                      domain_name="PE_ML"))
+    us_ml, ml = timeit(lambda: ex.run().results["PE_ML"], repeats=1)
+    us_sp, per_app = timeit(
+        lambda: ex.with_config(mode="per_app", max_merge=3).run().results,
+        repeats=1)
     out = {}
     worst_saving = 1.0
     for name in sorted(apps):

@@ -4,8 +4,8 @@ increasingly specialized for camera pipeline (baseline, PE1..PE5)."""
 from __future__ import annotations
 
 from repro.apps import image
-from repro.core import (baseline_datapath, evaluate_mapping, map_application,
-                        specialize_per_app)
+from repro.core import baseline_datapath, evaluate_mapping, map_application
+from repro.explore import ExploreConfig, Explorer
 
 from .common import BENCH_MINING, emit, timeit
 
@@ -21,9 +21,10 @@ def run() -> dict:
     c0 = evaluate_mapping(base, map_application(base, g, "camera"),
                           "baseline")
 
+    cfg = ExploreConfig(mode="per_app", mining=BENCH_MINING, max_merge=4)
     us, res = timeit(
-        lambda: specialize_per_app({"camera": g}, BENCH_MINING,
-                                   max_merge=4)["camera"], repeats=1)
+        lambda: Explorer({"camera": g}, cfg).run().results["camera"],
+        repeats=1)
     rows = {"baseline": c0}
     for v in res.variants:
         rows[v.name] = v.costs["camera"]

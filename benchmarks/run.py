@@ -11,7 +11,7 @@ import time
 
 
 def main() -> None:
-    from . import (fabric_camera_bench, fabric_ml_bench,
+    from . import (explore_bench, fabric_camera_bench, fabric_ml_bench,
                    fig8_camera_specialization, fig10_image_pe_ip,
                    fig11_ml_pe, kernel_bench, mining_bench, pnr_bench,
                    sim_bench, table1_cgra_vs_asic)
@@ -25,7 +25,8 @@ def main() -> None:
     kernel_bench.run()          # TPU-adaptation kernel statistics
     pnr_bench.run()             # placer scaling (delta vs full) + harris
     sim_bench.run()             # time domain: achieved II + golden check
-    fabric_ml_bench.run(fast=True)     # Fig. 11 @ 16x16 -> AppCost jsonl
+    explore_bench.run(smoke=True)      # batched vs serial pnr stage
+    fabric_ml_bench.run(fast=True)     # Fig. 11 @ 16x16 -> records jsonl
     fabric_camera_bench.run(fast=True)  # camera @ auto-fit 18x17 fabric
     print(f"# total benchmark wall time: {time.time()-t0:.1f}s",
           file=sys.stderr)

@@ -7,9 +7,9 @@ Run:  PYTHONPATH=src python examples/dse_image_pipeline.py [--deep]
 import argparse
 
 from repro.apps import image_graphs
-from repro.core import (MiningConfig, baseline_datapath, domain_pe,
-                        evaluate_mapping, map_application,
-                        specialize_per_app)
+from repro.core import (MiningConfig, baseline_datapath, evaluate_mapping,
+                        map_application)
+from repro.explore import ExploreConfig, Explorer
 
 
 def main() -> None:
@@ -30,7 +30,11 @@ def main() -> None:
         print(f"  {n:<10} {g.num_compute_nodes()} ops")
 
     print("\n== per-app specialization (PE Spec) ==")
-    per_app = specialize_per_app(apps, mining, max_merge=4)
+    # one Explorer memo store for the whole example: the domain run below
+    # reuses this run's mining/ranking instead of re-mining all four apps
+    ex = Explorer(apps, ExploreConfig(mode="per_app", mining=mining,
+                                      max_merge=4))
+    per_app = ex.run().results
     for name in sorted(apps):
         res = per_app[name]
         c0 = evaluate_mapping(base, map_application(base, apps[name], name),
@@ -43,7 +47,8 @@ def main() -> None:
               f"ops/pe {best.ops_per_pe:.2f}")
 
     print("\n== cross-application PE IP (paper Fig. 10) ==")
-    ip = domain_pe(apps, mining, per_app_subgraphs=2, domain_name="PE_IP")
+    ip = ex.with_config(mode="domain", per_app_subgraphs=2,
+                        domain_name="PE_IP").run().results["PE_IP"]
     v = ip.variants[0]
     print(f"  PE IP: {v.datapath.summary()}")
     for name in sorted(apps):

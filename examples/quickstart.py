@@ -13,7 +13,8 @@ import jax.numpy as jnp
 
 from repro.graphir import trace_scalar
 from repro.core import (MiningConfig, baseline_datapath, evaluate_mapping,
-                        map_application, mine_and_rank, specialize_per_app)
+                        map_application, mine_and_rank)
+from repro.explore import ExploreConfig, Explorer
 from repro.kernels import fused_pe_apply
 from repro.kernels.ref import ref_pe
 from repro.graphir.graph import free_in_ports
@@ -36,10 +37,12 @@ def main() -> None:
     for m in ranked[:4]:
         print("  ", m)
 
-    # 3-5. merge into PE variants + map + evaluate (Sec. III-C, IV, V)
-    res = specialize_per_app({"conv": app},
-                             MiningConfig(min_support=2,
-                                          max_pattern_nodes=5))["conv"]
+    # 3-5. merge into PE variants + map + evaluate (Sec. III-C, IV, V) —
+    # the staged pipeline behind `python -m repro.explore`
+    cfg = ExploreConfig(mode="per_app",
+                        mining=MiningConfig(min_support=2,
+                                            max_pattern_nodes=5))
+    res = Explorer({"conv": app}, cfg).run().results["conv"]
     base = baseline_datapath()
     c0 = evaluate_mapping(base, map_application(base, app, "conv"),
                           "baseline")

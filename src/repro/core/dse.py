@@ -1,4 +1,4 @@
-"""End-to-end design-space-exploration driver (paper Sec. IV, Fig. 6).
+"""End-to-end design-space-exploration primitives (paper Sec. IV, Fig. 6).
 
 Given one or more application dataflow graphs:
 
@@ -11,22 +11,31 @@ Given one or more application dataflow graphs:
 4. map every app onto every variant and evaluate area/energy/fmax.
 
 The returned records are exactly what the paper's Figs. 8/10/11 plot.
+
+The end-to-end drivers (``specialize_per_app`` / ``domain_pe`` /
+``evaluate_variants``) are retained as thin, bit-identical shims over the
+staged pipeline in :mod:`repro.explore` — new code should build an
+:class:`repro.explore.ExploreConfig` and run an
+:class:`repro.explore.Explorer` instead of threading loose kwargs here.
 """
 
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Set, Tuple
+from typing import Dict, List, Optional, Sequence, Set, TYPE_CHECKING, Union
 
 from ..graphir.graph import Graph
 from ..graphir.ops import NON_COMPUTE, unit_of
-from .costmodel import AppCost, evaluate_mapping
-from .mapper import map_application
+from .costmodel import AppCost
 from .merge import add_pattern, baseline_datapath, is_pe_pattern, _PE_UNITS
 from .mining import MinedSubgraph, MiningConfig, mine_frequent_subgraphs
 from .mis import rank_by_mis
 from .pe import Datapath
+
+if TYPE_CHECKING:
+    from ..fabric.arch import FabricSpec
+    from ..fabric.cost import FabricCost
+    from ..fabric.options import FabricOptions
 
 
 @dataclass
@@ -35,8 +44,8 @@ class PEVariant:
     datapath: Datapath
     merged_subgraphs: List[str] = field(default_factory=list)
     costs: Dict[str, AppCost] = field(default_factory=dict)   # per app
-    fabric_costs: Dict[str, "object"] = field(default_factory=dict)
-    # per app FabricCost when fabric-level evaluation is enabled
+    fabric_costs: Dict[str, "FabricCost"] = field(default_factory=dict)
+    # per app, filled when fabric-level evaluation is enabled
 
 
 @dataclass
@@ -47,8 +56,22 @@ class DSEResult:
     elapsed_s: float = 0.0
 
     def best_variant(self, app: str) -> PEVariant:
+        """Lowest-energy variant for an app.
+
+        Ranks by the *measured* ``sim_energy_per_op_pj`` when the time-
+        domain simulation ran for a variant (``sim_ii > 0``) — so a skew-
+        bound schedule's idle cycles penalize it — falling back to the
+        static ``energy_per_op_pj`` estimate for variants the simulator
+        never saw.
+        """
         cands = [v for v in self.variants if app in v.costs]
-        return min(cands, key=lambda v: v.costs[app].energy_per_op_pj)
+
+        def energy(v: PEVariant) -> float:
+            c = v.costs[app]
+            return (c.sim_energy_per_op_pj if c.sim_ii > 0
+                    else c.energy_per_op_pj)
+
+        return min(cands, key=energy)
 
     def table(self) -> str:
         lines = []
@@ -138,75 +161,56 @@ def build_variants(app_name: str, app: Graph,
     return variants
 
 
+def _explorer_config(mode: str, mining: Optional[MiningConfig],
+                     options: Optional["FabricOptions"], **kw):
+    """Build the ExploreConfig a legacy driver call corresponds to.
+
+    ``pnr_batch="serial"`` pins the one-dispatch-per-pair annealing loop,
+    which is what makes the shims reproduce the pre-``repro.explore``
+    records bit-identically at equal seeds.
+    """
+    from ..explore.config import ExploreConfig
+    return ExploreConfig(mode=mode, mining=mining or MiningConfig(),
+                         fabric=options, pnr_batch="serial", **kw)
+
+
 def evaluate_variants(variants: Sequence[PEVariant],
                       apps: Dict[str, Graph],
-                      *, fabric: Optional[object] = None,
+                      *, fabric: Optional[Union["FabricSpec",
+                                                "FabricOptions"]] = None,
                       fabric_backend: Optional[str] = None,
                       fabric_chains: Optional[int] = None,
                       fabric_sweeps: Optional[int] = None,
                       fabric_seed: Optional[int] = None,
                       simulate: bool = False) -> None:
-    """Map + cost every (variant, app) pair; optionally also at array level.
+    """Deprecated shim: map + cost every (variant, app) pair in place.
+
+    Delegates to :func:`repro.explore.evaluate_pairs` (serial mode — the
+    legacy loop, bit-identical at equal seeds).  The loose ``fabric_*``
+    kwargs emit :class:`DeprecationWarning`; new code should run an
+    :class:`repro.explore.Explorer` (which also batches the annealing
+    across pairs) or pass a full :class:`repro.fabric.FabricOptions`.
 
     fabric: a :class:`repro.fabric.FabricOptions` (or a bare ``FabricSpec``
     plus the legacy ``fabric_*`` kwargs, folded in automatically) — when
     given, each mapping is placed and routed on the fabric (auto-grown when
     the variant needs more tiles) and the array-accurate numbers are
     attached to the AppCost records (``fabric_*`` fields) and kept in
-    ``variant.fabric_costs``.  A specialized PE covers the same app with
-    fewer instances, so it earns both the per-tile win *and* shorter
-    routes — the tradeoff only visible at this level.
+    ``variant.fabric_costs``.
 
     simulate: with a fabric, additionally modulo-schedule and cycle-
     accurately simulate every mapping, attaching *measured* throughput
-    (``sim_*`` fields: achieved II, latency, activity, energy/op including
-    idle cycles) and — when ``options.sim_verify`` — the bit-exact golden
-    check against ``graphir.interp``.
+    (``sim_*`` fields) and — when ``options.sim_verify`` — the bit-exact
+    golden check against ``graphir.interp``.
     """
+    from ..explore.pipeline import evaluate_pairs
     from ..fabric.options import FabricOptions
 
     options = FabricOptions.coerce(fabric, backend=fabric_backend,
                                    chains=fabric_chains,
                                    sweeps=fabric_sweeps, seed=fabric_seed,
                                    simulate=simulate)
-    if options is not None:
-        from ..fabric import place_and_route
-        from ..fabric.cost import attach_fabric
-        from .costmodel import attach_sim
-    for v in variants:
-        for app_name, app in apps.items():
-            mapping = map_application(v.datapath, app, app_name)
-            cost = evaluate_mapping(v.datapath, mapping, v.name)
-            v.costs[app_name] = cost
-            if options is None:
-                continue
-            pnr = place_and_route(v.datapath, mapping, app, options.spec,
-                                  backend=options.backend,
-                                  chains=options.chains,
-                                  sweeps=options.sweeps,
-                                  seed=options.seed, pe_name=v.name,
-                                  hpwl_backend=options.hpwl_backend,
-                                  score_mode=options.score_mode)
-            v.fabric_costs[app_name] = pnr.cost
-            attach_fabric(cost, pnr.cost)
-            if options.simulate:
-                from ..sim import (build_sim, check_against_interp,
-                                   random_inputs)
-                prog, _ = build_sim(v.datapath, mapping, app, pnr=pnr)
-                verified = -1
-                if options.sim_verify:
-                    inputs = random_inputs(prog, options.sim_iterations,
-                                           options.sim_batch,
-                                           seed=options.seed)
-                    _, err, exact = check_against_interp(
-                        prog, app, inputs, backend=options.sim_backend)
-                    verified = int(exact and err == 0.0)
-                    if not verified:
-                        raise AssertionError(
-                            f"simulated {app_name} on {v.name} diverges "
-                            f"from graphir.interp (max |err|={err:.3e})")
-                attach_sim(cost, v.datapath, prog.schedule,
-                           fabric_cost=pnr.cost, verified=verified)
+    evaluate_pairs(variants, apps, options, pnr_batch="serial")
 
 
 def specialize_per_app(apps: Dict[str, Graph],
@@ -214,34 +218,31 @@ def specialize_per_app(apps: Dict[str, Graph],
                        *, max_merge: int = 4,
                        rank_mode: str = "mis",
                        validate: bool = True,
-                       fabric: Optional[object] = None,
+                       fabric: Optional[Union["FabricSpec",
+                                              "FabricOptions"]] = None,
                        fabric_backend: Optional[str] = None,
                        fabric_chains: Optional[int] = None,
                        fabric_sweeps: Optional[int] = None,
                        fabric_seed: Optional[int] = None,
                        simulate: bool = False) -> Dict[str, DSEResult]:
-    """Per-application DSE: PE1..PE5 per app (paper Sec. V-A camera sweep).
+    """Deprecated shim: per-application DSE (paper Sec. V-A camera sweep).
 
-    Pass ``fabric=FabricOptions(...)`` (or a bare ``FabricSpec``) to
-    additionally place-and-route every variant on the array, and
-    ``simulate=True`` to modulo-schedule + cycle-accurately simulate each
-    mapping so the records carry measured throughput
-    (see :func:`evaluate_variants`).
+    Runs an :class:`repro.explore.Explorer` in ``per_app`` mode with
+    ``pnr_batch="serial"``, reproducing the pre-redesign records
+    bit-identically at equal seeds.  New code should build an
+    :class:`repro.explore.ExploreConfig` directly — it memoizes every
+    stage and batches the annealing across (variant, app) pairs.
     """
-    out: Dict[str, DSEResult] = {}
-    for name, app in apps.items():
-        t0 = time.monotonic()
-        ranked = mine_and_rank(app, mining)
-        variants = build_variants(name, app, ranked, max_merge=max_merge,
-                                  rank_mode=rank_mode, validate=validate)
-        evaluate_variants(variants, {name: app}, fabric=fabric,
-                          fabric_backend=fabric_backend,
-                          fabric_chains=fabric_chains,
-                          fabric_sweeps=fabric_sweeps,
-                          fabric_seed=fabric_seed, simulate=simulate)
-        out[name] = DSEResult({name: app}, {name: ranked}, variants,
-                              time.monotonic() - t0)
-    return out
+    from ..explore.pipeline import Explorer
+    from ..fabric.options import FabricOptions
+
+    options = FabricOptions.coerce(fabric, backend=fabric_backend,
+                                   chains=fabric_chains,
+                                   sweeps=fabric_sweeps, seed=fabric_seed,
+                                   simulate=simulate)
+    cfg = _explorer_config("per_app", mining, options, max_merge=max_merge,
+                           rank_mode=rank_mode, validate=validate)
+    return Explorer(apps, cfg).run().results
 
 
 def domain_pe(apps: Dict[str, Graph],
@@ -249,40 +250,27 @@ def domain_pe(apps: Dict[str, Graph],
               *, per_app_subgraphs: int = 2,
               domain_name: str = "PE_DOM",
               validate: bool = True,
-              fabric: Optional[object] = None,
+              fabric: Optional[Union["FabricSpec",
+                                     "FabricOptions"]] = None,
               fabric_backend: Optional[str] = None,
               fabric_chains: Optional[int] = None,
               fabric_sweeps: Optional[int] = None,
               fabric_seed: Optional[int] = None,
               simulate: bool = False) -> DSEResult:
-    """Cross-application PE (paper's PE IP / PE ML)."""
-    t0 = time.monotonic()
-    mined: Dict[str, List[MinedSubgraph]] = {}
-    all_ops: Set[str] = set()
-    for name, app in apps.items():
-        mined[name] = mine_and_rank(app, mining)
-        all_ops |= app_ops(app)
-    dp = baseline_datapath(all_ops)
-    merged: List[str] = []
-    seen_labels: Set[str] = set()
-    for name, ranked in sorted(mined.items()):
-        usable = _dedup_keep_maximal(ranked)
-        count = 0
-        for m in usable:
-            if count >= per_app_subgraphs:
-                break
-            if m.label in seen_labels:
-                count += 1           # another app already contributed it
-                continue
-            seen_labels.add(m.label)
-            cfg_name = f"sg:{name}:{count}"
-            add_pattern(dp, m.pattern, cfg_name, validate=validate)
-            merged.append(cfg_name)
-            count += 1
-    variant = PEVariant(domain_name, dp, merged)
-    evaluate_variants([variant], apps, fabric=fabric,
-                      fabric_backend=fabric_backend,
-                      fabric_chains=fabric_chains,
-                      fabric_sweeps=fabric_sweeps,
-                      fabric_seed=fabric_seed, simulate=simulate)
-    return DSEResult(apps, mined, [variant], time.monotonic() - t0)
+    """Deprecated shim: cross-application PE (paper's PE IP / PE ML).
+
+    Runs an :class:`repro.explore.Explorer` in ``domain`` mode with
+    ``pnr_batch="serial"`` — bit-identical to the pre-redesign driver at
+    equal seeds.  New code should use :class:`repro.explore.ExploreConfig`.
+    """
+    from ..explore.pipeline import Explorer
+    from ..fabric.options import FabricOptions
+
+    options = FabricOptions.coerce(fabric, backend=fabric_backend,
+                                   chains=fabric_chains,
+                                   sweeps=fabric_sweeps, seed=fabric_seed,
+                                   simulate=simulate)
+    cfg = _explorer_config("domain", mining, options,
+                           per_app_subgraphs=per_app_subgraphs,
+                           domain_name=domain_name, validate=validate)
+    return Explorer(apps, cfg).run().results[domain_name]

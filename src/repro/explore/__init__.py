@@ -1,0 +1,32 @@
+"""Staged, batch-first design-space-exploration pipeline.
+
+The paper's flow (Sec. IV, Fig. 6) as an explicit pipeline object over a
+single config::
+
+    from repro.explore import ExploreConfig, Explorer
+    from repro.fabric import FabricOptions, FabricSpec
+
+    cfg = ExploreConfig(mode="per_app",
+                        mining=MiningConfig(min_support=3),
+                        fabric=FabricOptions(spec=FabricSpec(rows=8, cols=8),
+                                             simulate=True))
+    res = Explorer(apps, cfg).run()
+    res.to_jsonl("results/explore.jsonl")
+
+Stages (``mine -> rank -> merge -> map -> pnr -> schedule -> simulate``)
+are individually invokable and memoized by content key; the ``pnr`` stage
+anneals all (variant, app) placements of a bucket signature in one JAX
+dispatch.  ``python -m repro.explore --help`` drives the same pipeline
+from the command line.
+"""
+
+from .config import CONFIG_SCHEMA, ExploreConfig
+from .pipeline import (Explorer, ExploreResult, evaluate_pairs, graph_key,
+                       pnr_grouped)
+from .records import RECORD_SCHEMA, ExploreRecord, from_jsonl, to_jsonl
+
+__all__ = [
+    "CONFIG_SCHEMA", "ExploreConfig", "Explorer", "ExploreResult",
+    "evaluate_pairs", "graph_key", "pnr_grouped",
+    "RECORD_SCHEMA", "ExploreRecord", "from_jsonl", "to_jsonl",
+]

@@ -1,0 +1,109 @@
+"""One frozen config object for a whole exploration.
+
+The paper's flow (Sec. IV, Fig. 6) is a fixed pipeline — mine -> rank ->
+merge -> map -> evaluate — but the original driver threaded one keyword
+argument per subsystem through three layers.  :class:`ExploreConfig`
+bundles every knob (mining budget, merge/rank options, fabric
+place-and-route, time-domain simulation) into a single dataclass with a
+JSON round trip, so an exploration is reproducible from one blob::
+
+    cfg = ExploreConfig(mode="per_app", mining=MiningConfig(min_support=3),
+                        fabric=FabricOptions(spec=FabricSpec(rows=8, cols=8),
+                                             simulate=True))
+    json.dump(cfg.to_dict(), open("explore.json", "w"))
+    cfg2 = ExploreConfig.from_dict(json.load(open("explore.json")))
+    assert cfg2 == cfg
+"""
+
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass, field, fields, replace
+from typing import Any, Dict, Optional
+
+from ..core.mining import MiningConfig
+from ..fabric.options import FabricOptions
+
+#: bump when a field is added/renamed/retyped; from_dict rejects unknown
+#: versions so stale blobs fail loudly instead of silently defaulting
+CONFIG_SCHEMA = 1
+
+MODES = ("per_app", "domain")
+PNR_BATCH_MODES = ("grouped", "serial")
+
+
+@dataclass(frozen=True)
+class ExploreConfig:
+    """Everything one DSE run needs, in one place.
+
+    mode              — "per_app" (PE1..PE(1+max_merge) per application,
+                        paper Sec. V-A) | "domain" (one cross-application
+                        PE IP / PE ML, Sec. V-B).
+    mining            — frequent-subgraph mining budget (Sec. III-A).
+    max_merge         — subgraphs merged per app in per_app mode.
+    rank_mode         — "mis" (paper order) | "utility" (beyond-paper).
+    validate          — prove each merged config executes its pattern.
+    per_app_subgraphs — subgraphs each app contributes in domain mode.
+    domain_name       — the domain variant's PE name.
+    fabric            — array-level evaluation (place-and-route and, with
+                        ``fabric.simulate``, modulo scheduling + cycle-
+                        accurate simulation); None = per-tile model only.
+    pnr_batch         — "grouped": all (variant, app) placements of one
+                        bucket signature anneal in one JAX dispatch
+                        (:func:`repro.fabric.place.anneal_jax_batch`);
+                        "serial": one dispatch per pair (the legacy loop —
+                        bit-identical to the pre-``repro.explore`` driver).
+    """
+
+    mode: str = "per_app"
+    mining: MiningConfig = field(default_factory=MiningConfig)
+    max_merge: int = 4
+    rank_mode: str = "mis"
+    validate: bool = True
+    per_app_subgraphs: int = 2
+    domain_name: str = "PE_DOM"
+    fabric: Optional[FabricOptions] = None
+    pnr_batch: str = "grouped"
+
+    def __post_init__(self) -> None:
+        if self.mode not in MODES:
+            raise ValueError(f"mode must be one of {MODES}, got {self.mode!r}")
+        if self.pnr_batch not in PNR_BATCH_MODES:
+            raise ValueError(f"pnr_batch must be one of {PNR_BATCH_MODES}, "
+                             f"got {self.pnr_batch!r}")
+        if self.rank_mode not in ("mis", "utility"):
+            raise ValueError(f"unknown rank_mode {self.rank_mode!r}")
+        if self.simulate and self.fabric is None:
+            raise ValueError("simulation requires a fabric")
+
+    @property
+    def simulate(self) -> bool:
+        return self.fabric is not None and self.fabric.simulate
+
+    def replace(self, **changes: Any) -> "ExploreConfig":
+        return replace(self, **changes)
+
+    # -- JSON round trip ---------------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        d = asdict(self)
+        d["mining"] = asdict(self.mining)
+        d["fabric"] = None if self.fabric is None else self.fabric.to_dict()
+        d["schema"] = CONFIG_SCHEMA
+        return d
+
+    @staticmethod
+    def from_dict(d: Dict[str, Any]) -> "ExploreConfig":
+        d = dict(d)
+        schema = d.pop("schema", CONFIG_SCHEMA)
+        if schema != CONFIG_SCHEMA:
+            raise ValueError(f"ExploreConfig schema {schema} not supported "
+                             f"(this build reads schema {CONFIG_SCHEMA})")
+        known = {f.name for f in fields(ExploreConfig)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown ExploreConfig fields {sorted(unknown)}")
+        mining = d.pop("mining", None)
+        fabric = d.pop("fabric", None)
+        return ExploreConfig(
+            mining=MiningConfig(**mining) if mining else MiningConfig(),
+            fabric=None if fabric is None else FabricOptions.from_dict(fabric),
+            **d)

@@ -1,0 +1,540 @@
+"""The staged exploration pipeline: mine -> rank -> merge -> map -> pnr ->
+schedule -> simulate.
+
+:class:`Explorer` runs the paper's flow (Sec. IV, Fig. 6) as explicit,
+individually invokable stages over one :class:`ExploreConfig`.  Every
+stage is memoized by a *content key* — a hash of the application graph
+plus exactly the upstream config fields that stage depends on — so
+flipping ``simulate=True`` or changing the annealing budget reuses every
+upstream artifact instead of re-mining and re-merging:
+
+    ex = Explorer(apps, cfg)
+    res = ex.run()                                   # full pipeline
+    res2 = ex.with_config(fabric=replace(cfg.fabric,
+                                         simulate=True)).run()
+    ex.stats["mine"]     # still the first run's count: zero re-mines
+
+The ``pnr`` stage is batch-first: all (variant, app) mappings are
+gathered, lowered, grouped by :func:`repro.fabric.place.batch_signature`,
+and annealed with chains spread across pairs in one JAX dispatch per
+group (``pnr_batch="grouped"``).  ``pnr_batch="serial"`` runs the legacy
+one-dispatch-per-pair loop and is bit-identical to the pre-``repro.
+explore`` driver — it is what the deprecated ``specialize_per_app`` /
+``domain_pe`` / ``evaluate_variants`` shims pin.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import time
+import zlib
+from collections import Counter, defaultdict
+from dataclasses import dataclass, replace as _dc_replace
+from typing import Any, Callable, Dict, List, Optional, Tuple, TYPE_CHECKING
+
+from ..core.costmodel import AppCost, attach_sim, evaluate_mapping
+from ..core.dse import (DSEResult, PEVariant, _dedup_keep_maximal, app_ops,
+                        build_variants)
+from ..core.mapper import Mapping, map_application
+from ..core.merge import add_pattern, baseline_datapath, is_pe_pattern
+from ..core.mining import MinedSubgraph, mine_frequent_subgraphs
+from ..core.mis import rank_by_mis
+from ..graphir.graph import Graph
+from .config import ExploreConfig
+from .records import ExploreRecord
+
+if TYPE_CHECKING:                              # runtime import stays lazy
+    from ..fabric import PnRResult
+    from ..fabric.options import FabricOptions
+
+Pair = Tuple[str, str]                         # (pe_name, app_name)
+
+
+# ---------------------------------------------------------------------------
+# content keys
+# ---------------------------------------------------------------------------
+def _digest(*parts: Any) -> str:
+    return hashlib.sha256(
+        json.dumps(parts, sort_keys=True, default=repr).encode()
+    ).hexdigest()[:16]
+
+
+def graph_key(g: Graph) -> str:
+    """Stable structural fingerprint of an application graph."""
+    nodes = sorted((nid, op, sorted((g.attrs.get(nid) or {}).items()))
+                   for nid, op in g.nodes.items())
+    return _digest(nodes, sorted(g.edges), list(g.outputs))
+
+
+def _mining_fields(cfg: ExploreConfig) -> Tuple:
+    m = cfg.mining
+    return (m.min_support, m.max_pattern_nodes, m.max_patterns_per_level,
+            m.max_embeddings, m.max_ext_embeddings, m.time_budget_s,
+            m.allow_macros)
+
+
+def _pnr_fields(options: "FabricOptions", pnr_batch: str) -> Tuple:
+    s = options.spec
+    spec_sig = None if s is None else (s.rows, s.cols, s.channel_width,
+                                       s.io_capacity, s.hop_energy_pj,
+                                       s.hop_delay_ns, s.latch_depth)
+    return (spec_sig, options.backend, options.hpwl_backend,
+            options.score_mode, options.chains, options.sweeps,
+            options.seed, pnr_batch)
+
+
+def _sim_fields(options: "FabricOptions") -> Tuple:
+    return (options.sim_iterations, options.sim_batch, options.sim_backend,
+            options.sim_verify, options.seed)
+
+
+# ---------------------------------------------------------------------------
+# per-pair primitives (shared by the Explorer stages and the legacy shims)
+# ---------------------------------------------------------------------------
+def _pnr_pair(pe_name, dp, mapping, app, options) -> "PnRResult":
+    from ..fabric import place_and_route
+    return place_and_route(dp, mapping, app, options.spec,
+                           backend=options.backend, chains=options.chains,
+                           sweeps=options.sweeps, seed=options.seed,
+                           pe_name=pe_name,
+                           hpwl_backend=options.hpwl_backend,
+                           score_mode=options.score_mode)
+
+
+def pnr_grouped(items: List[Tuple[str, Any, Mapping, Graph, int]],
+                options: "FabricOptions",
+                stats: Optional[Counter] = None) -> List["PnRResult"]:
+    """Place-and-route many (variant, app) pairs, annealing each bucket-
+    compatible group in ONE JAX dispatch.
+
+    items: (pe_name, datapath, mapping, app, nonce) per pair; the nonce
+    seeds the pair's chains so its placement is reproducible regardless of
+    which pairs share its dispatch.  Routing and costing stay per-pair
+    (they are cheap Python); only the annealing hot loop is batched.
+    """
+    from ..fabric import PnRResult
+    from ..fabric.arch import Coord, FabricSpec
+    from ..fabric.cost import evaluate_fabric
+    from ..fabric.netlist import extract_netlist
+    from ..fabric.place import (Placement, anneal_jax_batch,
+                                batch_signature, lower)
+    from ..fabric.route import route_nets
+    import numpy as np
+
+    spec0 = options.spec or FabricSpec()
+    lowered = []
+    for pe_name, dp, mapping, app, nonce in items:
+        netlist = extract_netlist(mapping, app, spec0)
+        spec = spec0.fit(len(netlist.pe_cells), len(netlist.io_cells))
+        lowered.append((netlist, spec, lower(netlist, spec)))
+
+    groups: Dict[Tuple, List[int]] = defaultdict(list)
+    for i, (_, _, prob) in enumerate(lowered):
+        groups[batch_signature(prob, options.sweeps)].append(i)
+
+    annealed: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+    for idxs in groups.values():
+        out = anneal_jax_batch([lowered[i][2] for i in idxs],
+                               chains=options.chains, seed=options.seed,
+                               sweeps=options.sweeps,
+                               score_mode=options.score_mode,
+                               nonces=[items[i][4] for i in idxs])
+        annealed.update(zip(idxs, out))
+        if stats is not None:
+            stats["pnr_dispatch"] += 1
+
+    results = []
+    for i, (pe_name, dp, mapping, app, _) in enumerate(items):
+        netlist, spec, prob = lowered[i]
+        slots, costs = annealed[i]
+        best = int(np.argmin(costs))
+        coords: Dict[str, Coord] = {}
+        for idx, name in enumerate(prob.cell_names):
+            x, y = prob.slot_xy[slots[best][prob.entity_of(idx)]]
+            coords[name] = (int(x), int(y))
+        placement = Placement(coords=coords, cost=float(costs[best]),
+                              backend="jax", chains=options.chains,
+                              sweeps=options.sweeps,
+                              chain_costs=[float(c) for c in costs])
+        routes = route_nets(netlist, placement, spec)
+        fc = evaluate_fabric(dp, mapping, netlist, placement, routes, spec,
+                             pe_name=pe_name)
+        results.append(PnRResult(spec, netlist, placement, routes, fc))
+    return results
+
+
+def _verify_prog(prog, app: Graph, label: str, options) -> int:
+    """Golden-check one SimProgram against graphir.interp.
+
+    Returns 1 (bit-exact), -1 when ``options.sim_verify`` is off; raises
+    on mismatch.
+    """
+    if not options.sim_verify:
+        return -1
+    from ..sim import check_against_interp, random_inputs
+    inputs = random_inputs(prog, options.sim_iterations, options.sim_batch,
+                           seed=options.seed)
+    _, err, exact = check_against_interp(prog, app, inputs,
+                                         backend=options.sim_backend)
+    if not (exact and err == 0.0):
+        raise AssertionError(f"simulated {label} diverges from "
+                             f"graphir.interp (max |err|={err:.3e})")
+    return 1
+
+
+def _sim_pair(dp, mapping, app, pnr, options) -> Tuple[Any, int]:
+    """(SimProgram, verified) for one placed-and-routed pair."""
+    from ..sim import build_sim
+    prog, _ = build_sim(dp, mapping, app, pnr=pnr)
+    return prog, _verify_prog(prog, app, mapping.app_name, options)
+
+
+def evaluate_pairs(variants, apps: Dict[str, Graph],
+                   options: Optional["FabricOptions"], *,
+                   pnr_batch: str = "serial") -> None:
+    """Map + cost every (variant, app) pair in place; optional array-level
+    PnR and time-domain simulation.  This is the engine behind the
+    deprecated :func:`repro.core.dse.evaluate_variants` shim; the serial
+    mode reproduces the legacy loop bit-for-bit.
+    """
+    from ..fabric.cost import attach_fabric
+
+    todo = []
+    for v in variants:
+        for app_name, app in apps.items():
+            mapping = map_application(v.datapath, app, app_name)
+            cost = evaluate_mapping(v.datapath, mapping, v.name)
+            v.costs[app_name] = cost
+            if options is not None:
+                todo.append((v, app_name, app, mapping, cost))
+    if options is None:
+        return
+
+    if pnr_batch == "grouped":
+        items = [(v.name, v.datapath, mapping, app,
+                  zlib.crc32(f"{v.name}:{app_name}".encode()))
+                 for v, app_name, app, mapping, _ in todo]
+        pnrs = pnr_grouped(items, options)
+    else:
+        pnrs = [_pnr_pair(v.name, v.datapath, mapping, app, options)
+                for v, app_name, app, mapping, _ in todo]
+
+    for (v, app_name, app, mapping, cost), pnr in zip(todo, pnrs):
+        v.fabric_costs[app_name] = pnr.cost
+        attach_fabric(cost, pnr.cost)
+        if options.simulate:
+            prog, verified = _sim_pair(v.datapath, mapping, app, pnr,
+                                       options)
+            attach_sim(cost, v.datapath, prog.schedule,
+                       fabric_cost=pnr.cost, verified=verified)
+
+
+# ---------------------------------------------------------------------------
+# the Explorer
+# ---------------------------------------------------------------------------
+@dataclass
+class ExploreResult:
+    """Everything one pipeline run produced, plus the flat record view."""
+
+    config: ExploreConfig
+    config_key: str
+    apps: Dict[str, Graph]
+    results: Dict[str, DSEResult]    # per app, or {domain_name: result}
+    elapsed_s: float
+
+    def records(self) -> List[ExploreRecord]:
+        rows: List[ExploreRecord] = []
+        for res in self.results.values():
+            for app_name in sorted(res.apps):
+                for v in res.variants:
+                    if app_name not in v.costs:
+                        continue
+                    rows.append(ExploreRecord.from_cost(
+                        v.costs[app_name], mode=self.config.mode,
+                        config_key=self.config_key,
+                        n_merged=len(v.merged_subgraphs)))
+        return rows
+
+    def to_jsonl(self, path: str) -> int:
+        from .records import to_jsonl
+        return to_jsonl(self.records(), path)
+
+    def table(self) -> str:
+        return "\n".join(r.row() for res in self.results.values()
+                         for v in res.variants
+                         for r in [v.costs[a] for a in sorted(v.costs)])
+
+
+class Explorer:
+    """Staged, memoized DSE pipeline over one config.
+
+    Stages (each individually invokable, each memoized by content key):
+
+    ``mine()``      raw frequent subgraphs per app (Sec. III-A)
+    ``rank()``      PE-pattern filter + MIS ranking (Sec. III-B)
+    ``merge()``     PE variant datapaths (Sec. III-C / V)
+    ``map()``       application covers per (variant, app) (Sec. IV)
+    ``pnr()``       array place-and-route — batch-first across pairs
+    ``schedule()``  modulo schedules / sim programs per pair
+    ``simulate()``  cycle-accurate golden verification per pair
+    ``run()``       everything the config asks for -> :class:`ExploreResult`
+
+    ``with_config(...)`` derives a new Explorer over changed options that
+    *shares the memo store*, so downstream-only changes (annealing budget,
+    ``simulate=True``) reuse all upstream artifacts.
+    """
+
+    def __init__(self, apps: Dict[str, Graph], config: ExploreConfig, *,
+                 store: Optional[Dict] = None,
+                 stats: Optional[Counter] = None) -> None:
+        self.apps = dict(apps)
+        self.config = config
+        self._store: Dict[Tuple, Any] = {} if store is None else store
+        self.stats: Counter = Counter() if stats is None else stats
+        self._app_keys = {name: graph_key(g) for name, g in apps.items()}
+
+    def with_config(self, **changes: Any) -> "Explorer":
+        """New Explorer over a changed config, sharing the memo store."""
+        return Explorer(self.apps, self.config.replace(**changes),
+                        store=self._store, stats=self.stats)
+
+    def _memo(self, key: Tuple, stage: str, thunk: Callable[[], Any]) -> Any:
+        if key not in self._store:
+            self._store[key] = thunk()
+            self.stats[stage] += 1
+        return self._store[key]
+
+    # -- stages ------------------------------------------------------------
+    def mine(self) -> Dict[str, List[MinedSubgraph]]:
+        cfg = self.config
+        out = {}
+        for name, app in self.apps.items():
+            key = ("mine", self._app_keys[name], _mining_fields(cfg))
+            out[name] = self._memo(
+                key, "mine", lambda a=app: mine_frequent_subgraphs(a,
+                                                                   cfg.mining))
+        return out
+
+    def rank(self) -> Dict[str, List[MinedSubgraph]]:
+        mined = self.mine()
+        out = {}
+        for name in self.apps:
+            key = ("rank", self._app_keys[name],
+                   _mining_fields(self.config))
+            out[name] = self._memo(
+                key, "rank", lambda n=name: rank_by_mis(
+                    [m for m in mined[n] if is_pe_pattern(m.pattern)]))
+        return out
+
+    def _merge_key(self, name: Optional[str] = None) -> Tuple:
+        cfg = self.config
+        if cfg.mode == "per_app":
+            return ("merge", self._app_keys[name], _mining_fields(cfg),
+                    cfg.max_merge, cfg.rank_mode, cfg.validate)
+        return ("merge_domain", tuple(sorted(self._app_keys.items())),
+                _mining_fields(cfg), cfg.per_app_subgraphs, cfg.domain_name,
+                cfg.validate)
+
+    def merge(self) -> Dict[str, List[PEVariant]]:
+        """Variant templates per app name (one shared list in domain mode).
+
+        The returned PEVariant objects are memoized templates; ``run()``
+        wraps them in fresh containers before attaching costs.
+        """
+        ranked = self.rank()
+        cfg = self.config
+        if cfg.mode == "per_app":
+            return {name: self._memo(
+                        self._merge_key(name), "merge",
+                        lambda n=name: build_variants(
+                            n, self.apps[n], ranked[n],
+                            max_merge=cfg.max_merge, rank_mode=cfg.rank_mode,
+                            validate=cfg.validate))
+                    for name in self.apps}
+        variant = self._memo(self._merge_key(), "merge",
+                             lambda: self._build_domain_variant(ranked))
+        return {cfg.domain_name: [variant]}
+
+    def _build_domain_variant(self, ranked) -> PEVariant:
+        """Cross-application PE (paper's PE IP / PE ML, Sec. V-B)."""
+        cfg = self.config
+        all_ops = set()
+        for app in self.apps.values():
+            all_ops |= app_ops(app)
+        dp = baseline_datapath(all_ops)
+        merged: List[str] = []
+        seen_labels = set()
+        for name, ranked_app in sorted(ranked.items()):
+            usable = _dedup_keep_maximal(ranked_app)
+            count = 0
+            for m in usable:
+                if count >= cfg.per_app_subgraphs:
+                    break
+                if m.label in seen_labels:
+                    count += 1       # another app already contributed it
+                    continue
+                seen_labels.add(m.label)
+                cfg_name = f"sg:{name}:{count}"
+                add_pattern(dp, m.pattern, cfg_name, validate=cfg.validate)
+                merged.append(cfg_name)
+                count += 1
+        return PEVariant(cfg.domain_name, dp, merged)
+
+    def _pairs(self) -> List[Tuple[PEVariant, str, Tuple]]:
+        """(variant template, app_name, map key) for every evaluated pair."""
+        cfg = self.config
+        variants = self.merge()
+        out = []
+        if cfg.mode == "per_app":
+            for name in self.apps:
+                mk = self._merge_key(name)
+                for v in variants[name]:
+                    out.append((v, name, ("map", mk, v.name,
+                                          self._app_keys[name])))
+        else:
+            mk = self._merge_key()
+            for v in variants[cfg.domain_name]:
+                for name in self.apps:
+                    out.append((v, name, ("map", mk, v.name,
+                                          self._app_keys[name])))
+        return out
+
+    def map(self) -> Dict[Pair, Mapping]:
+        out = {}
+        for v, app_name, key in self._pairs():
+            out[(v.name, app_name)] = self._memo(
+                key, "map", lambda v=v, a=app_name: map_application(
+                    v.datapath, self.apps[a], a))
+        return out
+
+    def _cost(self, v: PEVariant, app_name: str, map_key: Tuple) -> AppCost:
+        mapping = self._store[map_key]
+        return self._memo(("cost",) + map_key[1:], "cost",
+                          lambda: evaluate_mapping(v.datapath, mapping,
+                                                   v.name))
+
+    def pnr(self) -> Dict[Pair, "PnRResult"]:
+        """Array-level place-and-route for every pair — batch-first.
+
+        Gathers every pair missing from the memo, lowers all netlists,
+        groups them by bucket signature, and anneals each group's chains
+        in one JAX dispatch (``pnr_batch="grouped"``).  Non-"jax" backends
+        and ``pnr_batch="serial"`` fall back to the per-pair loop.
+        """
+        cfg = self.config
+        options = cfg.fabric
+        if options is None:
+            raise ValueError("pnr stage requires config.fabric")
+        mappings = self.map()
+        sig = _pnr_fields(options, cfg.pnr_batch)
+
+        keys: Dict[Pair, Tuple] = {}
+        misses = []
+        for v, app_name, map_key in self._pairs():
+            key = ("pnr", map_key[1:], sig)
+            keys[(v.name, app_name)] = key
+            if key not in self._store:
+                misses.append((v, app_name, key))
+
+        grouped = (cfg.pnr_batch == "grouped" and options.backend == "jax"
+                   and options.hpwl_backend == "jnp")
+        if misses and grouped:
+            items = [(v.name, v.datapath, mappings[(v.name, a)],
+                      self.apps[a], zlib.crc32(repr(key).encode()))
+                     for v, a, key in misses]
+            pnrs = pnr_grouped(items, options, self.stats)
+            for (v, a, key), pnr in zip(misses, pnrs):
+                self._store[key] = pnr
+                self.stats["pnr"] += 1
+        elif misses:
+            for v, a, key in misses:
+                self._store[key] = _pnr_pair(v.name, v.datapath,
+                                             mappings[(v.name, a)],
+                                             self.apps[a], options)
+                self.stats["pnr"] += 1
+                self.stats["pnr_dispatch"] += 1
+        return {pair: self._store[key] for pair, key in keys.items()}
+
+    def schedule(self) -> Dict[Pair, Any]:
+        """Modulo-scheduled SimProgram per pair."""
+        from ..sim import build_sim
+        if self.config.fabric is None:
+            raise ValueError("schedule stage requires config.fabric")
+        mappings = self.map()
+        pnrs = self.pnr()
+        out = {}
+        for v, app_name, map_key in self._pairs():
+            key = ("sched", map_key[1:],
+                   _pnr_fields(self.config.fabric, self.config.pnr_batch))
+            out[(v.name, app_name)] = self._memo(
+                key, "sched",
+                lambda v=v, a=app_name: build_sim(
+                    v.datapath, mappings[(v.name, a)], self.apps[a],
+                    pnr=pnrs[(v.name, a)])[0])
+        return out
+
+    def simulate(self) -> Dict[Pair, int]:
+        """Golden-verification flags per pair (−1 when verify is off)."""
+        cfg = self.config
+        options = cfg.fabric
+        if options is None:
+            raise ValueError("simulate stage requires config.fabric")
+        progs = self.schedule()
+        out = {}
+        for v, app_name, map_key in self._pairs():
+            pair = (v.name, app_name)
+            key = ("sim", map_key[1:], _pnr_fields(options, cfg.pnr_batch),
+                   _sim_fields(options))
+            out[pair] = self._memo(
+                key, "sim",
+                lambda v=v, a=app_name, pair=pair: _verify_prog(
+                    progs[pair], self.apps[a], f"{a} on {v.name}", options))
+        return out
+
+    # -- full pipeline -----------------------------------------------------
+    def run(self) -> ExploreResult:
+        cfg = self.config
+        t0 = time.monotonic()
+        ranked = self.rank()
+        variants = self.merge()
+        self.map()
+        pnrs = self.pnr() if cfg.fabric is not None else {}
+        progs = self.schedule() if cfg.simulate else {}
+        verified = self.simulate() if cfg.simulate else {}
+        elapsed = time.monotonic() - t0
+
+        def fresh(v: PEVariant, app_names) -> PEVariant:
+            out = PEVariant(v.name, v.datapath, list(v.merged_subgraphs))
+            for a in app_names:
+                mk = ("map", self._merge_key(
+                    a if cfg.mode == "per_app" else None), v.name,
+                    self._app_keys[a])
+                cost = _dc_replace(self._cost(v, a, mk))
+                if (v.name, a) in pnrs:
+                    from ..fabric.cost import attach_fabric
+                    out.fabric_costs[a] = pnrs[(v.name, a)].cost
+                    attach_fabric(cost, pnrs[(v.name, a)].cost)
+                if (v.name, a) in progs:
+                    attach_sim(cost, v.datapath, progs[(v.name, a)].schedule,
+                               fabric_cost=pnrs[(v.name, a)].cost,
+                               verified=verified.get((v.name, a), -1))
+                out.costs[a] = cost
+            return out
+
+        # every DSEResult carries the whole run's elapsed time: stages are
+        # batched across apps, so per-app wall time is not separable (the
+        # legacy driver timed each app's serial loop individually)
+        results: Dict[str, DSEResult] = {}
+        if cfg.mode == "per_app":
+            for name, app in self.apps.items():
+                results[name] = DSEResult(
+                    {name: app}, {name: ranked[name]},
+                    [fresh(v, [name]) for v in variants[name]], elapsed)
+        else:
+            results[cfg.domain_name] = DSEResult(
+                dict(self.apps), ranked,
+                [fresh(v, sorted(self.apps)) for v in
+                 variants[cfg.domain_name]], elapsed)
+        return ExploreResult(cfg, _digest(cfg.to_dict()), dict(self.apps),
+                             results, elapsed)

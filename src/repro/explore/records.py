@@ -1,0 +1,107 @@
+"""Schema-versioned flat result rows for exploration sweeps.
+
+Every (variant, app) pair an :class:`~repro.explore.Explorer` evaluates
+becomes one :class:`ExploreRecord`: the full ``AppCost`` column set
+(per-tile, CGRA-level, array-accurate ``fabric_*``, measured ``sim_*``)
+plus exploration identity — the pipeline mode, the variant's merged-
+subgraph count, and the content key of the producing config, so a row can
+always be traced back to the exact exploration that made it.
+
+Rows round-trip through jsonl (:func:`to_jsonl` / :func:`from_jsonl`) and
+stay directly consumable by ``results/make_tables.py ... fabric`` (the
+record is a strict superset of the AppCost dict that table reads).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from dataclasses import dataclass
+from typing import Any, Dict, Iterable, List
+
+from ..core.costmodel import AppCost
+
+#: bump on any field add/rename/retype; from_jsonl rejects other versions
+RECORD_SCHEMA = 1
+
+
+@dataclass
+class ExploreRecord:
+    """One flat row per (variant, app): identity + the AppCost columns."""
+
+    schema: int
+    mode: str                  # "per_app" | "domain"
+    config_key: str            # content key of the producing ExploreConfig
+    n_merged: int              # subgraphs merged into this variant
+    # -- AppCost columns (names match costmodel.AppCost exactly) ----------
+    app: str
+    pe_name: str
+    n_pes: int
+    total_ops: int
+    pe_area_um2: float
+    total_area_um2: float
+    energy_pj: float
+    energy_per_op_pj: float
+    fmax_ghz: float
+    ops_per_pe: float
+    unmapped: int
+    cgra_area_um2: float = 0.0
+    cgra_energy_pj: float = 0.0
+    cgra_energy_per_op_pj: float = 0.0
+    fabric_area_um2: float = 0.0
+    fabric_energy_per_op_pj: float = 0.0
+    fabric_fmax_ghz: float = 0.0
+    fabric_wirelength: int = 0
+    fabric_utilization: float = 0.0
+    sim_ii: int = 0
+    sim_min_ii: int = 0
+    sim_latency_cycles: int = 0
+    sim_active_frac: float = 0.0
+    sim_throughput_gops: float = 0.0
+    sim_energy_per_op_pj: float = 0.0
+    sim_verified: int = -1
+
+    @staticmethod
+    def from_cost(cost: AppCost, *, mode: str, config_key: str,
+                  n_merged: int = 0) -> "ExploreRecord":
+        return ExploreRecord(schema=RECORD_SCHEMA, mode=mode,
+                             config_key=config_key, n_merged=n_merged,
+                             **dataclasses.asdict(cost))
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_dict(d: Dict[str, Any]) -> "ExploreRecord":
+        schema = d.get("schema")
+        if schema != RECORD_SCHEMA:
+            raise ValueError(f"ExploreRecord schema {schema!r} not supported "
+                             f"(this build reads schema {RECORD_SCHEMA})")
+        known = {f.name for f in dataclasses.fields(ExploreRecord)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown ExploreRecord fields {sorted(unknown)}")
+        return ExploreRecord(**d)
+
+
+def to_jsonl(records: Iterable[ExploreRecord], path: str) -> int:
+    """Write one record per line; returns the row count."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    n = 0
+    with open(path, "w") as f:
+        for r in records:
+            f.write(json.dumps(r.to_dict()) + "\n")
+            n += 1
+    return n
+
+
+def from_jsonl(path: str) -> List[ExploreRecord]:
+    """Read records back, validating the schema version per row."""
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(ExploreRecord.from_dict(json.loads(line)))
+    return out

@@ -25,15 +25,17 @@ from .arch import FabricSpec, manhattan
 from .cost import FabricCost, attach_fabric, evaluate_fabric
 from .netlist import Cell, Net, Netlist, extract_netlist, synthetic_netlist
 from .options import FabricOptions
-from .place import Placement, PlacementProblem, anneal_jax, anneal_python, \
-    lower, net_incidence, place
+from .place import Placement, PlacementProblem, anneal_jax, \
+    anneal_jax_batch, anneal_python, batch_signature, lower, net_incidence, \
+    place
 from .route import RouteResult, RoutedNet, route_nets
 
 __all__ = [
     "FabricSpec", "FabricOptions", "manhattan", "Cell", "Net", "Netlist",
     "extract_netlist", "synthetic_netlist", "Placement", "PlacementProblem",
-    "lower", "net_incidence", "place",
-    "anneal_jax", "anneal_python", "RouteResult", "RoutedNet", "route_nets",
+    "lower", "net_incidence", "place", "anneal_jax", "anneal_jax_batch",
+    "anneal_python", "batch_signature",
+    "RouteResult", "RoutedNet", "route_nets",
     "FabricCost", "evaluate_fabric", "attach_fabric", "PnRResult",
     "place_and_route",
 ]

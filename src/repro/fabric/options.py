@@ -9,8 +9,9 @@ so existing call sites keep working.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, replace
-from typing import Optional
+import warnings
+from dataclasses import asdict, dataclass, fields, replace
+from typing import Any, Dict, Optional
 
 from .arch import FabricSpec
 
@@ -56,6 +57,23 @@ class FabricOptions:
     def with_spec(self, spec: FabricSpec) -> "FabricOptions":
         return replace(self, spec=spec)
 
+    def to_dict(self) -> Dict[str, Any]:
+        """JSON-ready dict; inverse of :meth:`from_dict`."""
+        d = asdict(self)
+        d["spec"] = None if self.spec is None else asdict(self.spec)
+        return d
+
+    @staticmethod
+    def from_dict(d: Dict[str, Any]) -> "FabricOptions":
+        d = dict(d)
+        spec = d.pop("spec", None)
+        known = {f.name for f in fields(FabricOptions)} - {"spec"}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown FabricOptions fields {sorted(unknown)}")
+        return FabricOptions(
+            spec=None if spec is None else FabricSpec(**spec), **d)
+
     @staticmethod
     def coerce(fabric, *, backend: Optional[str] = None,
                chains: Optional[int] = None, sweeps: Optional[int] = None,
@@ -83,6 +101,13 @@ class FabricOptions:
                     f"FabricOptions — set those fields on the options object")
             return replace(fabric, simulate=fabric.simulate or simulate)
         if isinstance(fabric, FabricSpec):
+            passed = [k for k, v in legacy.items() if v is not None]
+            if passed:
+                warnings.warn(
+                    f"the loose {passed} kwargs are deprecated; pass "
+                    f"fabric=FabricOptions(spec=..., ...) (or use "
+                    f"repro.explore.ExploreConfig) instead",
+                    DeprecationWarning, stacklevel=3)
             defaults = FabricOptions()
             return FabricOptions(
                 spec=fabric,

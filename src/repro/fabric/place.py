@@ -40,7 +40,8 @@ from .arch import Coord, FabricSpec
 from .netlist import Netlist
 
 __all__ = ["PlacementProblem", "Placement", "lower", "net_incidence",
-           "anneal_python", "anneal_jax", "place"]
+           "anneal_python", "anneal_jax", "anneal_jax_batch", "place",
+           "batch_signature"]
 
 
 @dataclass
@@ -368,6 +369,220 @@ def anneal_jax(p: PlacementProblem, *, chains: int = 32, seed: int = 0,
     slots, costs = run(keys, init, p.slot_xy, p.net_pins, p.net_mask,
                        ent_nets)
     return np.asarray(slots), np.asarray(costs)
+
+
+# ---------------------------------------------------------------------------
+# Cross-problem batching: many (variant, app) placements in one dispatch
+# ---------------------------------------------------------------------------
+def _bucket(n: int) -> int:
+    """Next power of two >= n — the padding granule for batched problems.
+
+    Padding every problem to bucket sizes (instead of group-max) makes a
+    problem's annealed result independent of which other problems share its
+    dispatch, so batched placements are reproducible and cacheable per
+    problem, and the compiled program is reused across explorations."""
+    return 1 << max(0, (n - 1)).bit_length()
+
+
+def batch_signature(p: PlacementProblem, sweeps: int) -> Tuple[int, ...]:
+    """Static shape key two problems must share to ride one dispatch."""
+    steps = max(1, sweeps * (p.n_pe_cells + p.n_io_cells))
+    return (_bucket(steps), _bucket(p.net_pins.shape[0]),
+            _bucket(p.net_pins.shape[1]), _bucket(p.n_entities),
+            _bucket(p.ent_nets.shape[1]))
+
+
+@functools.lru_cache(maxsize=64)
+def _build_batch_annealer(s_pad: int, n_pad: int, d_pad: int, e_pad: int,
+                          k_pad: int, t1: float, hpwl_backend: str,
+                          score_mode: str):
+    """One compiled chain program for every problem of one bucket signature.
+
+    Unlike :func:`_build_annealer` (which bakes the cell/slot counts into
+    the program as static Python ints), the batched chain takes them as
+    *data* — so PE1 on camera and PE4 on conv can share a program as long
+    as their padded shapes land in the same buckets.  Moves are sampled by
+    scaling uniforms with the dynamic counts, the temperature schedule uses
+    the dynamic per-problem step count, and steps beyond a problem's real
+    budget are masked to rejects.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from ..kernels.pnr_cost import hpwl, hpwl_delta, net_hpwl
+
+    if hpwl_backend != "jnp":
+        raise ValueError("anneal_jax_batch supports hpwl_backend='jnp' only "
+                         "(the pallas delta kernel scores one swap per call)")
+    if score_mode not in ("delta", "full"):
+        raise ValueError(f"unknown score_mode {score_mode!r}")
+
+    def chain(key, slot_of0, slot_xy, net_pins, net_mask, ent_nets,
+              dims, t0):
+        n_pe_c, n_io_c, n_pe_s, n_io_s, n_steps = (
+            dims[0], dims[1], dims[2], dims[3], dims[4])
+        n_real = jnp.maximum(n_pe_c + n_io_c, 1)
+
+        k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+        pick_pe = (jax.random.uniform(k1, (s_pad,))
+                   < n_pe_c.astype(jnp.float32) / n_real.astype(jnp.float32))
+
+        def scaled(k, count, lo):
+            u = jax.random.uniform(k, (s_pad,))
+            idx = jnp.minimum((u * count).astype(jnp.int32),
+                              jnp.maximum(count - 1, 0))
+            return lo + idx
+
+        a = jnp.where(pick_pe, scaled(k2, n_pe_c, 0),
+                      scaled(k3, n_io_c, n_pe_s))
+        t = jnp.where(pick_pe, scaled(k4, n_pe_s, 0),
+                      scaled(k5, n_io_s, n_pe_s))
+        log_u = jnp.log(jax.random.uniform(k6, (s_pad,), minval=1e-12))
+        frac = (jnp.arange(s_pad, dtype=jnp.float32)
+                / jnp.maximum(n_steps.astype(jnp.float32), 1.0))
+        temps = t0 * (t1 / t0) ** frac
+        active = jnp.arange(s_pad) < n_steps
+
+        def accept_and_track(accept, cand, new, state_rest):
+            slot_of, cur, best_slot, best = state_rest
+            slot_of = jnp.where(accept, cand, slot_of)
+            cur = jnp.where(accept, new, cur)
+            improved = cur < best
+            best_slot = jnp.where(improved, slot_of, best_slot)
+            best = jnp.where(improved, cur, best)
+            return slot_of, cur, best_slot, best
+
+        if score_mode == "full":
+            def step(i, state):
+                slot_of, cur, best_slot, best = state
+                ai, ti = a[i], t[i]
+                b = jnp.argmax(slot_of == ti)
+                cand = slot_of.at[ai].set(slot_of[b]).at[b].set(slot_of[ai])
+                new = hpwl(slot_xy[cand], net_pins, net_mask)
+                accept = ((new <= cur)
+                          | (log_u[i] * temps[i] < cur - new)) & active[i]
+                return accept_and_track(accept, cand, new, state)
+
+            c0 = hpwl(slot_xy[slot_of0], net_pins, net_mask)
+            _, _, best_slot, best = jax.lax.fori_loop(
+                0, s_pad, step, (slot_of0, c0, slot_of0, c0))
+            return best_slot, best
+
+        k2_ = k_pad * 2
+        dup_tri = jnp.tril(jnp.ones((k2_, k2_), bool), k=-1)
+
+        def step(i, state):
+            slot_of, pnc, cur, best_slot, best = state
+            ai, ti = a[i], t[i]
+            b = jnp.argmax(slot_of == ti)
+            cand = slot_of.at[ai].set(slot_of[b]).at[b].set(slot_of[ai])
+            tn = jnp.concatenate([ent_nets[ai], ent_nets[b]])
+            dup = jnp.any((tn[:, None] == tn[None, :]) & dup_tri, axis=1)
+            tn = jnp.where(dup, n_pad, tn)
+            new_vals, delta = hpwl_delta(slot_xy, cand, net_pins, net_mask,
+                                         pnc, tn)
+            new = cur + delta
+            accept = ((new <= cur)
+                      | (log_u[i] * temps[i] < cur - new)) & active[i]
+            pnc = jnp.where(accept,
+                            pnc.at[tn].set(new_vals, mode="drop"), pnc)
+            slot_of, cur, best_slot, best = accept_and_track(
+                accept, cand, new, (slot_of, cur, best_slot, best))
+            return slot_of, pnc, cur, best_slot, best
+
+        pnc0 = net_hpwl(slot_xy[slot_of0], net_pins, net_mask)
+        c0 = jnp.sum(pnc0)
+        _, _, _, best_slot, best = jax.lax.fori_loop(
+            0, s_pad, step, (slot_of0, pnc0, c0, slot_of0, c0))
+        return best_slot, best
+
+    # one flat vmap over problems x chains, each row carrying its own
+    # problem data: a nested vmap (outer problems, inner chains with the
+    # problem arrays broadcast) would avoid the per-chain copies but
+    # measures ~2x slower end to end on the Fig. 11 suite, so the copies
+    # (a few MB at these sizes) buy the better-vectorizing flat batch
+    return jax.jit(jax.vmap(chain))
+
+
+def anneal_jax_batch(problems: List[PlacementProblem], *, chains: int = 16,
+                     seed: int = 0, sweeps: int = 32,
+                     t0: Optional[float] = None, t1: float = 0.02,
+                     score_mode: str = "delta",
+                     nonces: Optional[List[int]] = None
+                     ) -> List[Tuple[np.ndarray, np.ndarray]]:
+    """Anneal many placement problems in one JAX dispatch.
+
+    All problems must share one :func:`batch_signature`; every problem's
+    arrays are padded to the signature's bucket shapes (masked nets score
+    zero, dummy entities sit on dummy slots and are never proposed as
+    moves) and all ``len(problems) x chains`` chains run as one vmapped
+    ``fori_loop``.  Returns per problem ``(slot_of (C, E), costs (C,))``
+    with E the problem's real entity count — the same contract as
+    :func:`anneal_jax`.
+
+    Each problem's chains draw from ``fold_in(PRNGKey(seed), nonce)`` with
+    ``nonces[i]`` defaulting to ``i``.  Callers wanting placements that are
+    reproducible *regardless of grouping* (the explore pipeline's memo
+    contract) pass a content-derived nonce per problem; with bucket-shape
+    padding the result then depends only on the problem itself, never on
+    its groupmates.
+    """
+    import jax
+
+    if nonces is None:
+        nonces = list(range(len(problems)))
+    if len(nonces) != len(problems):
+        raise ValueError("nonces must match problems 1:1")
+    sigs = {batch_signature(p, sweeps) for p in problems}
+    if len(sigs) != 1:
+        raise ValueError(f"problems span {len(sigs)} batch signatures; "
+                         f"group by batch_signature() first")
+    s_pad, n_pad, d_pad, e_pad, k_pad = next(iter(sigs))
+
+    n_p = len(problems)
+    net_pins = np.zeros((n_p, n_pad, d_pad), np.int32)
+    net_mask = np.zeros((n_p, n_pad, d_pad), bool)
+    slot_xy = np.zeros((n_p, e_pad, 2), np.float32)
+    ent_nets = np.full((n_p, e_pad, k_pad), n_pad, np.int32)
+    dims = np.zeros((n_p, 5), np.int32)
+    t0s = np.zeros((n_p,), np.float32)
+    init = np.tile(np.arange(e_pad, dtype=np.int32), (n_p, chains, 1))
+    keys = np.zeros((n_p, chains, 2), np.uint32)
+    base_key = jax.random.PRNGKey(seed)
+    for i, p in enumerate(problems):
+        n, d = p.net_pins.shape
+        net_pins[i, :n, :d] = p.net_pins
+        net_mask[i, :n, :d] = p.net_mask
+        e = p.n_entities
+        slot_xy[i, :e] = p.slot_xy
+        en = np.where(p.ent_nets == n, n_pad, p.ent_nets)
+        ent_nets[i, :e, :en.shape[1]] = en
+        n_real = p.n_pe_cells + p.n_io_cells
+        dims[i] = (p.n_pe_cells, p.n_io_cells, p.n_pe_slots, p.n_io_slots,
+                   max(1, sweeps * n_real))
+        t0s[i] = _default_t0(p) if t0 is None else t0
+        rng = _random.Random(seed)
+        for c in range(chains):
+            init[i, c, :e] = _init_slots(p, rng)
+        keys[i] = np.asarray(jax.random.split(
+            jax.random.fold_in(base_key, nonces[i] & 0x7FFFFFFF), chains))
+
+    run = _build_batch_annealer(s_pad, n_pad, d_pad, e_pad, k_pad,
+                                float(t1), "jnp", score_mode)
+
+    def flat(x):                     # (P, C, ...) -> (P*C, ...)
+        return x.reshape((n_p * chains,) + x.shape[2:])
+
+    def tile(x):                     # (P, ...) -> (P*C, ...) per-chain copy
+        return np.repeat(x, chains, axis=0)
+
+    slots, costs = run(flat(keys), flat(init), tile(slot_xy),
+                       tile(net_pins), tile(net_mask), tile(ent_nets),
+                       tile(dims), tile(t0s))
+    slots = np.asarray(slots).reshape(n_p, chains, e_pad)
+    costs = np.asarray(costs).reshape(n_p, chains)
+    return [(slots[i, :, :p.n_entities], costs[i])
+            for i, p in enumerate(problems)]
 
 
 def place(netlist: Netlist, spec: FabricSpec, *, backend: str = "jax",
