@@ -1,0 +1,123 @@
+#!/usr/bin/env python
+"""CI bench gate: assert the committed performance contract on BENCH_*.json.
+
+Loads every benchmark artifact the CI bench jobs produce and fails the job
+on regression.  Gates are *ratios* (batched-vs-serial speedups must stay
+>= 1.0) and *bit-identity flags* (batched paths must stay bit-identical to
+their per-pair references) — never absolute wall-clock, so shared-runner
+noise cannot flake the gate.
+
+Every known benchmark schema has an explicit rule below; an unknown
+BENCH_*.json fails loudly, so adding a benchmark artifact to CI forces
+adding its gate in the same change.
+
+Run:  python results/check_bench.py results/BENCH_*.json
+      python results/check_bench.py            # globs results/BENCH_*.json
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+from typing import Dict, List
+
+
+def _flag(data: Dict, path: str, key: str, errors: List[str]) -> None:
+    if data.get(key) is not True:
+        errors.append(f"{path}: {key} is {data.get(key)!r}, expected true")
+
+
+def _ratio(data: Dict, path: str, key: str, errors: List[str],
+           floor: float = 1.0) -> None:
+    val = data.get(key)
+    if not isinstance(val, (int, float)) or val < floor:
+        errors.append(f"{path}: {key}={val!r}, expected >= {floor}")
+
+
+def check_explore_pnr(data: Dict, path: str, errors: List[str]) -> str:
+    """Batched pnr must beat the serial loop and never add dispatches."""
+    _ratio(data, path, "speedup", errors)
+    if data.get("grouped_dispatches", 0) > data.get("serial_dispatches", 0):
+        errors.append(f"{path}: grouped used more dispatches than serial")
+    return (f"speedup={data.get('speedup')}x "
+            f"({data.get('serial_dispatches')}->"
+            f"{data.get('grouped_dispatches')} dispatches)")
+
+
+def check_explore_sim(data: Dict, path: str, errors: List[str]) -> str:
+    """Batched schedule/simulate must beat serial AND stay bit-identical."""
+    _ratio(data, path, "speedup", errors)
+    _flag(data, path, "bit_identical", errors)
+    _flag(data, path, "ii_identical", errors)
+    _flag(data, path, "verified", errors)
+    return (f"speedup={data.get('speedup')}x "
+            f"({data.get('serial_compiles')}->"
+            f"{data.get('grouped_sim_dispatches')} dispatches, bit-exact)")
+
+
+def check_pnr_bench(data: Dict, path: str, errors: List[str]) -> str:
+    """Delta scoring must stay bit-identical to full recompute at every
+    size (the delta-vs-full *speedup* is only gated at sizes where it is
+    not smoke-budget noise)."""
+    sizes = data.get("sizes", [])
+    if not sizes:
+        errors.append(f"{path}: no sizes[] entries")
+    for s in sizes:
+        if s.get("bit_identical") is not True:
+            errors.append(f"{path}: {s.get('rows')}x{s.get('cols')} "
+                          f"delta/full not bit-identical")
+        if s.get("n_cells", 0) >= 200:       # >= 16x16: delta must win
+            _ratio(s, f"{path}:{s.get('rows')}x{s.get('cols')}", "speedup",
+                   errors)
+    a64 = data.get("anneal64")
+    if a64 is not None and a64.get("completed") is not True:
+        errors.append(f"{path}: 64x64 anneal did not complete")
+    return f"{len(sizes)} sizes bit-identical"
+
+
+CHECKS = {
+    "explore_pnr_batch": check_explore_pnr,
+    "explore_sim_batch": check_explore_sim,
+    "pnr_bench/v1": check_pnr_bench,
+}
+
+
+def check_file(path: str, errors: List[str]) -> None:
+    with open(path) as f:
+        data = json.load(f)
+    kind = data.get("bench") or data.get("schema")
+    checker = CHECKS.get(kind)
+    if checker is None:
+        errors.append(f"{path}: unknown benchmark kind {kind!r} — add a "
+                      f"gate rule to results/check_bench.py")
+        return
+    before = len(errors)
+    summary = checker(data, path, errors)
+    status = "OK " if len(errors) == before else "FAIL"
+    print(f"  {status} {path:<40} [{kind}] {summary}")
+
+
+def main(argv: List[str]) -> int:
+    paths = argv or sorted(glob.glob(
+        os.path.join(os.path.dirname(__file__) or ".", "BENCH_*.json")))
+    if not paths:
+        print("bench gate: no BENCH_*.json artifacts found", file=sys.stderr)
+        return 2
+    errors: List[str] = []
+    print(f"bench gate: checking {len(paths)} artifact(s)")
+    for path in paths:
+        check_file(path, errors)
+    if errors:
+        print(f"\nbench gate FAILED ({len(errors)} violation(s)):",
+              file=sys.stderr)
+        for e in errors:
+            print(f"  - {e}", file=sys.stderr)
+        return 1
+    print("bench gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

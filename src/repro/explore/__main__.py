@@ -52,7 +52,8 @@ def _config_from_args(args, mode: str) -> ExploreConfig:
     return ExploreConfig(mode=mode, mining=mining, max_merge=args.max_merge,
                          rank_mode=args.rank_mode, fabric=fabric,
                          per_app_subgraphs=args.per_app_subgraphs,
-                         domain_name=args.name, pnr_batch=args.pnr_batch)
+                         domain_name=args.name, pnr_batch=args.pnr_batch,
+                         sim_batch=args.sim_batch)
 
 
 def _add_common(sp: argparse.ArgumentParser) -> None:
@@ -80,6 +81,10 @@ def _add_common(sp: argparse.ArgumentParser) -> None:
     sp.add_argument("--seed", type=int, default=0)
     sp.add_argument("--pnr-batch", default="grouped",
                     choices=("grouped", "serial"))
+    sp.add_argument("--sim-batch", default="grouped",
+                    choices=("grouped", "serial"),
+                    help="batch-first schedule/simulate stages (grouped) "
+                         "or the per-pair loop (serial); bit-identical")
     sp.add_argument("--out", default=None, help="write records jsonl here")
     sp.add_argument("--dump-config", default=None,
                     help="write the resolved ExploreConfig JSON here")
@@ -151,9 +156,17 @@ def smoke() -> int:
     assert [r.to_dict() for r in back] == [r.to_dict() for r in rows], \
         "jsonl round trip diverged"
 
+    # the batch-first schedule/simulate stages actually batched: every
+    # simulated pair rode a vmapped dispatch, not a per-pair compile
+    assert ex.stats["sim_dispatch"] >= 1, "no batched sim dispatch ran"
+    assert ex.stats["sched_group"] >= 1, "no lockstep schedule group ran"
+    assert all(r.sim_bucket not in ("", "serial") for r in rows), \
+        "records missing batched sim_bucket provenance"
+
     print(res.table())
     print(f"# explore smoke OK: {len(rows)} records, "
           f"{ex.stats['pnr_dispatch']} batched pnr dispatch(es), "
+          f"{ex.stats['sim_dispatch']} batched sim dispatch(es), "
           f"stats={dict(ex.stats)}")
     return 0
 

@@ -25,10 +25,12 @@ from ..fabric.options import FabricOptions
 
 #: bump when a field is added/renamed/retyped; from_dict rejects unknown
 #: versions so stale blobs fail loudly instead of silently defaulting
-CONFIG_SCHEMA = 1
+#: (2: added sim_batch — batch-first schedule/simulate stages)
+CONFIG_SCHEMA = 2
 
 MODES = ("per_app", "domain")
 PNR_BATCH_MODES = ("grouped", "serial")
+SIM_BATCH_MODES = ("grouped", "serial")
 
 
 @dataclass(frozen=True)
@@ -52,6 +54,16 @@ class ExploreConfig:
                         (:func:`repro.fabric.place.anneal_jax_batch`);
                         "serial": one dispatch per pair (the legacy loop —
                         bit-identical to the pre-``repro.explore`` driver).
+    sim_batch         — "grouped": modulo scheduling runs its slot-conflict
+                        scans in lockstep across pairs sharing a fabric
+                        signature, and all simulations of one bucket
+                        signature ride ONE vmapped ``lax.scan``
+                        (:func:`repro.sim.simulate_batch`); "serial": the
+                        per-pair schedule + one-compile-per-program loop.
+                        Both modes produce bit-identical schedules and
+                        simulated outputs.  (Distinct from
+                        ``FabricOptions.sim_batch``, the *input batch
+                        size* fed to each simulation.)
     """
 
     mode: str = "per_app"
@@ -63,6 +75,7 @@ class ExploreConfig:
     domain_name: str = "PE_DOM"
     fabric: Optional[FabricOptions] = None
     pnr_batch: str = "grouped"
+    sim_batch: str = "grouped"
 
     def __post_init__(self) -> None:
         if self.mode not in MODES:
@@ -70,6 +83,9 @@ class ExploreConfig:
         if self.pnr_batch not in PNR_BATCH_MODES:
             raise ValueError(f"pnr_batch must be one of {PNR_BATCH_MODES}, "
                              f"got {self.pnr_batch!r}")
+        if self.sim_batch not in SIM_BATCH_MODES:
+            raise ValueError(f"sim_batch must be one of {SIM_BATCH_MODES}, "
+                             f"got {self.sim_batch!r}")
         if self.rank_mode not in ("mis", "utility"):
             raise ValueError(f"unknown rank_mode {self.rank_mode!r}")
         if self.simulate and self.fabric is None:

@@ -21,6 +21,18 @@ group (``pnr_batch="grouped"``).  ``pnr_batch="serial"`` runs the legacy
 one-dispatch-per-pair loop and is bit-identical to the pre-``repro.
 explore`` driver — it is what the deprecated ``specialize_per_app`` /
 ``domain_pe`` / ``evaluate_variants`` shims pin.
+
+The ``schedule`` and ``simulate`` stages are batch-first the same way
+(``sim_batch="grouped"``): modulo scheduling advances all pairs of one
+fabric signature in lockstep with their slot-conflict scans stacked into
+one numpy gather per round (:func:`repro.sim.modulo_schedule_batch`), and
+every bucket-compatible group of scheduled programs executes in ONE
+vmapped ``lax.scan`` (:func:`repro.sim.simulate_batch`) instead of
+compiling one scan per program.  Golden-check inputs are seeded by a
+content nonce per pair (:meth:`repro.fabric.options.FabricOptions.
+input_seed`), so schedules, simulated outputs, and verification flags are
+bit-identical between the grouped and serial modes and independent of
+which pairs share a bucket.
 """
 
 from __future__ import annotations
@@ -87,6 +99,12 @@ def _pnr_fields(options: "FabricOptions", pnr_batch: str) -> Tuple:
 def _sim_fields(options: "FabricOptions") -> Tuple:
     return (options.sim_iterations, options.sim_batch, options.sim_backend,
             options.sim_verify, options.seed)
+
+
+def _pair_nonce(pe_name: str, app_name: str) -> int:
+    """Content nonce for one (variant, app) pair: seeds the pair's golden
+    test vectors so simulated results never depend on bucket grouping."""
+    return zlib.crc32(f"{pe_name}:{app_name}".encode())
 
 
 # ---------------------------------------------------------------------------
@@ -164,8 +182,8 @@ def pnr_grouped(items: List[Tuple[str, Any, Mapping, Graph, int]],
     return results
 
 
-def _verify_prog(prog, app: Graph, label: str, options) -> int:
-    """Golden-check one SimProgram against graphir.interp.
+def _verify_prog(prog, app: Graph, label: str, options, nonce: int) -> int:
+    """Golden-check one SimProgram against graphir.interp (per-pair path).
 
     Returns 1 (bit-exact), -1 when ``options.sim_verify`` is off; raises
     on mismatch.
@@ -174,20 +192,24 @@ def _verify_prog(prog, app: Graph, label: str, options) -> int:
         return -1
     from ..sim import check_against_interp, random_inputs
     inputs = random_inputs(prog, options.sim_iterations, options.sim_batch,
-                           seed=options.seed)
+                           seed=options.input_seed(nonce))
     _, err, exact = check_against_interp(prog, app, inputs,
                                          backend=options.sim_backend)
+    return _require_exact(err, exact, label)
+
+
+def _require_exact(err: float, exact: bool, label: str) -> int:
     if not (exact and err == 0.0):
         raise AssertionError(f"simulated {label} diverges from "
                              f"graphir.interp (max |err|={err:.3e})")
     return 1
 
 
-def _sim_pair(dp, mapping, app, pnr, options) -> Tuple[Any, int]:
+def _sim_pair(dp, mapping, app, pnr, options, nonce: int) -> Tuple[Any, int]:
     """(SimProgram, verified) for one placed-and-routed pair."""
     from ..sim import build_sim
     prog, _ = build_sim(dp, mapping, app, pnr=pnr)
-    return prog, _verify_prog(prog, app, mapping.app_name, options)
+    return prog, _verify_prog(prog, app, mapping.app_name, options, nonce)
 
 
 def evaluate_pairs(variants, apps: Dict[str, Graph],
@@ -213,7 +235,7 @@ def evaluate_pairs(variants, apps: Dict[str, Graph],
 
     if pnr_batch == "grouped":
         items = [(v.name, v.datapath, mapping, app,
-                  zlib.crc32(f"{v.name}:{app_name}".encode()))
+                  _pair_nonce(v.name, app_name))
                  for v, app_name, app, mapping, _ in todo]
         pnrs = pnr_grouped(items, options)
     else:
@@ -225,7 +247,8 @@ def evaluate_pairs(variants, apps: Dict[str, Graph],
         attach_fabric(cost, pnr.cost)
         if options.simulate:
             prog, verified = _sim_pair(v.datapath, mapping, app, pnr,
-                                       options)
+                                       options,
+                                       _pair_nonce(v.name, app_name))
             attach_sim(cost, v.datapath, prog.schedule,
                        fabric_cost=pnr.cost, verified=verified)
 
@@ -242,8 +265,10 @@ class ExploreResult:
     apps: Dict[str, Graph]
     results: Dict[str, DSEResult]    # per app, or {domain_name: result}
     elapsed_s: float
+    sim_buckets: Dict[Pair, str] = None   # provenance per simulated pair
 
     def records(self) -> List[ExploreRecord]:
+        buckets = self.sim_buckets or {}
         rows: List[ExploreRecord] = []
         for res in self.results.values():
             for app_name in sorted(res.apps):
@@ -253,7 +278,8 @@ class ExploreResult:
                     rows.append(ExploreRecord.from_cost(
                         v.costs[app_name], mode=self.config.mode,
                         config_key=self.config_key,
-                        n_merged=len(v.merged_subgraphs)))
+                        n_merged=len(v.merged_subgraphs),
+                        sim_bucket=buckets.get((v.name, app_name), "")))
         return rows
 
     def to_jsonl(self, path: str) -> int:
@@ -457,40 +483,128 @@ class Explorer:
         return {pair: self._store[key] for pair, key in keys.items()}
 
     def schedule(self) -> Dict[Pair, Any]:
-        """Modulo-scheduled SimProgram per pair."""
-        from ..sim import build_sim
-        if self.config.fabric is None:
+        """Modulo-scheduled SimProgram per pair — batch-first.
+
+        ``sim_batch="grouped"`` schedules every missing pair through
+        :func:`repro.sim.modulo_schedule_batch`: pairs sharing a fabric
+        signature advance in lockstep with their slot-conflict scans
+        stacked into one numpy evaluation per round.  ``"serial"`` is the
+        legacy per-pair loop; schedules are bit-identical either way.
+        """
+        from ..sim import build_sim, build_sim_batch
+        cfg = self.config
+        if cfg.fabric is None:
             raise ValueError("schedule stage requires config.fabric")
         mappings = self.map()
         pnrs = self.pnr()
-        out = {}
+        sig = _pnr_fields(cfg.fabric, cfg.pnr_batch)
+
+        keys: Dict[Pair, Tuple] = {}
+        misses = []
         for v, app_name, map_key in self._pairs():
-            key = ("sched", map_key[1:],
-                   _pnr_fields(self.config.fabric, self.config.pnr_batch))
-            out[(v.name, app_name)] = self._memo(
-                key, "sched",
-                lambda v=v, a=app_name: build_sim(
+            key = ("sched", map_key[1:], sig, cfg.sim_batch)
+            keys[(v.name, app_name)] = key
+            if key not in self._store:
+                misses.append((v, app_name, key))
+
+        if misses and cfg.sim_batch == "grouped":
+            items = [(v.datapath, mappings[(v.name, a)], self.apps[a],
+                      pnrs[(v.name, a)]) for v, a, key in misses]
+            progs = build_sim_batch(items, stats=self.stats)
+            for (v, a, key), prog in zip(misses, progs):
+                self._store[key] = prog
+                self.stats["sched"] += 1
+        elif misses:
+            for v, a, key in misses:
+                self._store[key] = build_sim(
                     v.datapath, mappings[(v.name, a)], self.apps[a],
-                    pnr=pnrs[(v.name, a)])[0])
-        return out
+                    pnr=pnrs[(v.name, a)])[0]
+                self.stats["sched"] += 1
+        return {pair: self._store[key] for pair, key in keys.items()}
 
     def simulate(self) -> Dict[Pair, int]:
-        """Golden-verification flags per pair (−1 when verify is off)."""
+        """Golden-verification flags per pair (−1 when verify is off) —
+        batch-first.
+
+        ``sim_batch="grouped"`` (with the "jax" tile-step backend) groups
+        every missing pair's SimProgram by :func:`repro.sim.sim_signature`
+        and runs each bucket through ONE vmapped ``lax.scan``
+        (:func:`repro.sim.simulate_batch`); the interpreter comparison
+        stays per-pair (cheap numpy).  Content-nonce input seeding makes
+        each flag — and the simulated outputs behind it — independent of
+        which pairs shared the dispatch, and bit-identical to the
+        ``"serial"`` per-pair loop.
+        """
         cfg = self.config
         options = cfg.fabric
         if options is None:
             raise ValueError("simulate stage requires config.fabric")
         progs = self.schedule()
-        out = {}
+
+        keys: Dict[Pair, Tuple] = {}
+        misses = []
         for v, app_name, map_key in self._pairs():
             pair = (v.name, app_name)
             key = ("sim", map_key[1:], _pnr_fields(options, cfg.pnr_batch),
-                   _sim_fields(options))
-            out[pair] = self._memo(
-                key, "sim",
-                lambda v=v, a=app_name, pair=pair: _verify_prog(
-                    progs[pair], self.apps[a], f"{a} on {v.name}", options))
-        return out
+                   _sim_fields(options), cfg.sim_batch)
+            keys[pair] = key
+            if key not in self._store:
+                misses.append((v, app_name, key))
+
+        grouped = (cfg.sim_batch == "grouped"
+                   and options.sim_backend == "jax" and options.sim_verify)
+        if misses and grouped:
+            from ..sim import (compare_with_interp, random_inputs,
+                               sim_signature, simulate_batch)
+            by_bucket: Dict[Tuple, List[int]] = defaultdict(list)
+            inputs = []
+            for i, (v, a, key) in enumerate(misses):
+                prog = progs[(v.name, a)]
+                inputs.append(random_inputs(
+                    prog, options.sim_iterations, options.sim_batch,
+                    seed=options.input_seed(_pair_nonce(v.name, a))))
+                by_bucket[sim_signature(prog, options.sim_iterations,
+                                        options.sim_batch)].append(i)
+            for idxs in by_bucket.values():
+                results = simulate_batch(
+                    [progs[(misses[i][0].name, misses[i][1])]
+                     for i in idxs], [inputs[i] for i in idxs])
+                self.stats["sim_dispatch"] += 1
+                for i, res in zip(idxs, results):
+                    v, a, key = misses[i]
+                    err, exact = compare_with_interp(
+                        progs[(v.name, a)], self.apps[a], inputs[i], res)
+                    self._store[key] = _require_exact(err, exact,
+                                                      f"{a} on {v.name}")
+                    self.stats["sim"] += 1
+        elif misses:
+            for v, a, key in misses:
+                self._store[key] = _verify_prog(
+                    progs[(v.name, a)], self.apps[a], f"{a} on {v.name}",
+                    options, _pair_nonce(v.name, a))
+                self.stats["sim"] += 1
+        return {pair: self._store[key] for pair, key in keys.items()}
+
+    def sim_buckets(self, progs: Dict[Pair, Any]) -> Dict[Pair, str]:
+        """Provenance: the batched-simulate bucket each pair rides.
+
+        Derived purely from each pair's own program (bucket keys are
+        per-program paddings), so this is stable across runs and memo
+        hits.  Mirrors the gate :meth:`simulate` applies: ``"serial"``
+        when the per-pair loop runs (configured, or the fallback for
+        non-"jax" tile-step backends), ``""`` when verification is off
+        and no simulation executes at all.
+        """
+        options = self.config.fabric
+        if not options.sim_verify:
+            return {pair: "" for pair in progs}
+        if (self.config.sim_batch != "grouped"
+                or options.sim_backend != "jax"):
+            return {pair: "serial" for pair in progs}
+        from ..sim import sim_signature
+        return {pair: "x".join(str(d) for d in sim_signature(
+                    prog, options.sim_iterations, options.sim_batch))
+                for pair, prog in progs.items()}
 
     # -- full pipeline -----------------------------------------------------
     def run(self) -> ExploreResult:
@@ -537,4 +651,5 @@ class Explorer:
                 [fresh(v, sorted(self.apps)) for v in
                  variants[cfg.domain_name]], elapsed)
         return ExploreResult(cfg, _digest(cfg.to_dict()), dict(self.apps),
-                             results, elapsed)
+                             results, elapsed,
+                             self.sim_buckets(progs) if progs else {})

@@ -23,7 +23,8 @@ from typing import Any, Dict, Iterable, List
 from ..core.costmodel import AppCost
 
 #: bump on any field add/rename/retype; from_jsonl rejects other versions
-RECORD_SCHEMA = 1
+#: (2: added sim_bucket — the batched-simulate bucket the row rode)
+RECORD_SCHEMA = 2
 
 
 @dataclass
@@ -34,6 +35,9 @@ class ExploreRecord:
     mode: str                  # "per_app" | "domain"
     config_key: str            # content key of the producing ExploreConfig
     n_merged: int              # subgraphs merged into this variant
+    sim_bucket: str            # batched-simulate bucket signature ("serial"
+    # for the per-pair loop, "" when the pair was not simulated); outputs
+    # are bucket-independent — this is provenance, not a result column
     # -- AppCost columns (names match costmodel.AppCost exactly) ----------
     app: str
     pe_name: str
@@ -64,9 +68,10 @@ class ExploreRecord:
 
     @staticmethod
     def from_cost(cost: AppCost, *, mode: str, config_key: str,
-                  n_merged: int = 0) -> "ExploreRecord":
+                  n_merged: int = 0, sim_bucket: str = "") -> "ExploreRecord":
         return ExploreRecord(schema=RECORD_SCHEMA, mode=mode,
                              config_key=config_key, n_merged=n_merged,
+                             sim_bucket=sim_bucket,
                              **dataclasses.asdict(cost))
 
     def to_dict(self) -> Dict[str, Any]:

@@ -36,7 +36,10 @@ class FabricOptions:
                      throughput (``sim_*`` fields) to the AppCost records.
     sim_iterations/sim_batch — pipelined iterations x input batches fed to
                      the simulator (also drives the golden check).
-    sim_backend    — tile-step dispatch: "jax" | "pallas".
+    sim_backend    — tile-step dispatch: "jax" | "pallas".  Only "jax" can
+                     ride the batch-first simulate stage (the pallas
+                     kernel is per-program); other values fall back to the
+                     per-pair loop.
     sim_verify     — bit-compare simulated outputs against graphir.interp
                      and record the result (raises on mismatch).
     """
@@ -56,6 +59,18 @@ class FabricOptions:
 
     def with_spec(self, spec: FabricSpec) -> "FabricOptions":
         return replace(self, spec=spec)
+
+    def input_seed(self, nonce: int) -> int:
+        """RNG seed for one pair's golden-check test vectors.
+
+        Folding a content-derived nonce (hash of the (variant, app) pair)
+        into the configured seed makes every pair's vectors — and so its
+        simulated outputs — a function of the pair alone: the same whether
+        the pair simulates per-pair, shares a batched dispatch, or rides a
+        differently-composed bucket (the same contract
+        :func:`repro.fabric.place.anneal_jax_batch` keeps for placements).
+        """
+        return (self.seed ^ (nonce & 0x7FFFFFFF)) & 0x7FFFFFFF
 
     def to_dict(self) -> Dict[str, Any]:
         """JSON-ready dict; inverse of :meth:`from_dict`."""

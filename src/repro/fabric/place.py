@@ -36,6 +36,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from ..kernels.tiling import pow2_bucket as _bucket
 from .arch import Coord, FabricSpec
 from .netlist import Netlist
 
@@ -374,14 +375,6 @@ def anneal_jax(p: PlacementProblem, *, chains: int = 32, seed: int = 0,
 # ---------------------------------------------------------------------------
 # Cross-problem batching: many (variant, app) placements in one dispatch
 # ---------------------------------------------------------------------------
-def _bucket(n: int) -> int:
-    """Next power of two >= n — the padding granule for batched problems.
-
-    Padding every problem to bucket sizes (instead of group-max) makes a
-    problem's annealed result independent of which other problems share its
-    dispatch, so batched placements are reproducible and cacheable per
-    problem, and the compiled program is reused across explorations."""
-    return 1 << max(0, (n - 1)).bit_length()
 
 
 def batch_signature(p: PlacementProblem, sweeps: int) -> Tuple[int, ...]:

@@ -117,6 +117,26 @@ def alu_step_jnp(codes: jax.Array, a: jax.Array, b: jax.Array,
     return out.reshape(a.shape)
 
 
+@functools.partial(jax.jit, static_argnames=("ops",))
+def alu_step_masked(codes: jax.Array, a: jax.Array, b: jax.Array,
+                    c: jax.Array, ops: Tuple[str, ...],
+                    active: jax.Array) -> jax.Array:
+    """:func:`alu_step_jnp` with a dynamic activity mask.
+
+    ``active`` (broadcastable to ``a``'s shape) carries dynamic program
+    structure as *data*: the batched cycle simulator pads every tile to the
+    bucket's micro-op count and instance count, then masks the padding with
+    ``(step < n_steps) & (lane < n_inst)`` instead of baking each program's
+    real lengths into the compiled code.  Inactive lanes retire 0.0 — the
+    same value the nop padding computes — so one jitted program serves
+    every program in a bucket and results are bit-identical to the
+    per-program dispatch on the real lanes.
+    """
+    out = alu_step_jnp(codes, a, b, c, ops)
+    return jnp.where(jnp.broadcast_to(active, out.shape), out,
+                     jnp.zeros_like(out))
+
+
 # ---------------------------------------------------------------------------
 # Pallas kernel
 # ---------------------------------------------------------------------------

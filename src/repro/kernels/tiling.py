@@ -12,6 +12,18 @@ def round_up(n: int, k: int) -> int:
     return max(k, (n + k - 1) // k * k)
 
 
+def pow2_bucket(n: int) -> int:
+    """Next power of two >= max(n, 1) — the padding granule shared by every
+    cross-problem batching scheme in this repo (batched annealing, batched
+    cycle simulation).
+
+    Padding each problem to bucket sizes (instead of group-max) makes a
+    problem's batched result independent of which other problems share its
+    dispatch, so batched artifacts are reproducible and cacheable per
+    problem, and the compiled program is reused across explorations."""
+    return 1 << max(0, (n - 1)).bit_length()
+
+
 def pad2d(x, fill=0):
     """Zero-copy-where-possible pad of a 2-D array to the float32 VMEM tile
     grid (rows to a SUBLANE multiple, cols to a LANE multiple).

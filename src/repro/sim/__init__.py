@@ -22,15 +22,18 @@ Quick start::
     print(verify_mapping(dp, mapping, app).row())
 """
 
-from .cycle import SimProgram, SimResult, lower_program, simulate
-from .golden import (GoldenReport, build_sim, check_against_interp,
+from .cycle import (SimProgram, SimResult, lower_program, sim_signature,
+                    simulate, simulate_batch)
+from .golden import (GoldenReport, build_sim, build_sim_batch,
+                     check_against_interp, compare_with_interp,
                      random_inputs, verify_mapping)
-from .schedule import (ModuloSchedule, min_ii, modulo_schedule,
-                       route_timing)
+from .schedule import (ModuloSchedule, fabric_signature, min_ii,
+                       modulo_schedule, modulo_schedule_batch, route_timing)
 
 __all__ = [
-    "SimProgram", "SimResult", "lower_program", "simulate",
-    "GoldenReport", "build_sim", "check_against_interp", "random_inputs",
-    "verify_mapping", "ModuloSchedule", "min_ii", "modulo_schedule",
-    "route_timing",
+    "SimProgram", "SimResult", "lower_program", "sim_signature", "simulate",
+    "simulate_batch", "GoldenReport", "build_sim", "build_sim_batch",
+    "check_against_interp", "compare_with_interp", "random_inputs",
+    "verify_mapping", "ModuloSchedule", "fabric_signature", "min_ii",
+    "modulo_schedule", "modulo_schedule_batch", "route_timing",
 ]

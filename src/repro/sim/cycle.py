@@ -35,6 +35,7 @@ never had.
 
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -424,6 +425,267 @@ def _build_stepper(prog: SimProgram, iterations: int, backend: str,
         return carry[4]
 
     return jax.jit(run), cycles
+
+
+# ---------------------------------------------------------------------------
+# cross-program batching: many (variant, app) simulations in one dispatch
+# ---------------------------------------------------------------------------
+#: sentinel start time for padded periodic events — they never fire
+_NEVER = 1 << 30
+
+
+#: per-dimension lower bounds for the bucket key, sized so the programs a
+#: 16x16-class array typically produces all land in ONE bucket: compile
+#: count — not padded-lane arithmetic — dominates wall clock on a sweep,
+#: so small programs trade padding for sharing the compiled scan.  Floors
+#: are static constants, so a program's bucket (and therefore its padded
+#: lowering and outputs) still depends only on the program itself.
+_SIG_FLOORS = (64, 4, 32, 64, 512, 64, 32, 1, 256)
+
+
+def sim_signature(prog: SimProgram, iterations: int,
+                  batch: int) -> Tuple[int, ...]:
+    """Static shape key two programs must share to ride one vmapped scan.
+
+    Every dimension pads to its power-of-two bucket
+    (:func:`repro.kernels.tiling.pow2_bucket`), floored by
+    :data:`_SIG_FLOORS` — tiles, micro-op steps, I/O streams,
+    signal/wire/latch registers, output captures, and the total cycle
+    count — so the key (and therefore both the compiled program and a
+    program's simulated outputs) depends only on the program itself,
+    never on its groupmates.
+    """
+    from ..kernels.tiling import pow2_bucket as b
+
+    dims = (prog.n_inst, prog.n_steps, prog.n_ext, prog.n_sig, prog.n_wire,
+            prog.n_latch, prog.n_const, prog.n_out,
+            prog.total_cycles(iterations))
+    return tuple(max(b(d), f) for d, f in zip(dims, _SIG_FLOORS)) \
+        + (prog.latch_depth, iterations, batch)
+
+
+def _pad_program(prog: SimProgram, sig: Tuple[int, ...],
+                 code_of: Dict[str, int]) -> Dict[str, np.ndarray]:
+    """Lower one program onto the bucket shapes of ``sig``.
+
+    Operand/wire indices are remapped into the padded address spaces,
+    opcodes into the group's shared table; padded periodic events start at
+    ``_NEVER`` so they never fire, and padded register slots are only ever
+    read by other padding (real index tables reference real entries only).
+    """
+    ip, up, ep, sp, wp, lp, cp, op_, _, _, _, _ = sig
+    n_l, n_c, n_s = prog.n_latch, prog.n_const, prog.n_steps
+
+    lut = np.asarray([code_of[name] for name in prog.ops], np.int32)
+    opcodes = np.zeros((ip, up), np.int32)
+    opcodes[:prog.n_inst, :n_s] = lut[prog.opcodes]
+
+    # operand space [latch | const | tmp] -> [latch(lp) | const(cp) | tmp]
+    v = prog.op_src
+    tmp_off = v - n_l - n_c
+    remapped = np.where(
+        v < n_l, v,
+        np.where(v < n_l + n_c, lp + (v - n_l),
+                 lp + cp + (tmp_off // n_s) * up + tmp_off % n_s))
+    op_src = np.zeros((ip, up, _ARITY_PAD), np.int32)
+    op_src[:prog.n_inst, :n_s] = remapped
+
+    # wire sources [sig | ext | wire] -> [sig(sp) | ext(ep) | wire]
+    w = prog.wire_src
+    wire_src = np.zeros((wp,), np.int32)
+    wire_src[:prog.n_wire] = np.where(
+        w < prog.n_sig, w,
+        np.where(w < prog.n_sig + prog.n_ext, sp + (w - prog.n_sig),
+                 sp + ep + (w - prog.n_sig - prog.n_ext)))
+
+    sig_tmp = np.zeros((sp,), np.int32)
+    sig_tmp[:prog.n_sig] = ((prog.sig_tmp // n_s) * up + prog.sig_tmp % n_s)
+    sig_owner = np.zeros((sp,), np.int32)   # padded sigs may latch tile 0's
+    sig_owner[:prog.n_sig] = prog.sig_owner  # value; nothing ever reads them
+
+    def pad_time(src: np.ndarray, n: int) -> np.ndarray:
+        out = np.full((n,), _NEVER, np.int32)
+        out[:src.shape[0]] = src
+        return out
+
+    def pad_ix(src: np.ndarray, n: int) -> np.ndarray:
+        out = np.zeros((n,), np.int32)
+        out[:src.shape[0]] = src
+        return out
+
+    const_pool = np.zeros((cp,), np.float32)
+    const_pool[:n_c] = prog.const_pool
+    return dict(
+        ii=np.int32(prog.ii),
+        dims=np.asarray([n_s, prog.n_inst], np.int32),
+        opcodes=opcodes, op_src=op_src, const_pool=const_pool,
+        fire_time=pad_time(prog.fire_time, ip),
+        ext_time=pad_time(prog.ext_time, ep),
+        wire_src=wire_src, sig_tmp=sig_tmp, sig_owner=sig_owner,
+        latch_wire=pad_ix(prog.latch_wire, lp),
+        latch_time=pad_time(prog.latch_time, lp),
+        latch_owner=pad_ix(prog.latch_owner, lp),
+        out_wire=pad_ix(prog.out_wire, op_),
+        out_time=pad_time(prog.out_time, op_))
+
+
+#: field order of the stacked arrays fed to the batched stepper
+_BATCH_FIELDS = ("ii", "dims", "opcodes", "op_src", "const_pool",
+                 "fire_time", "ext_time", "wire_src", "sig_tmp", "sig_owner",
+                 "latch_wire", "latch_time", "latch_owner", "out_wire",
+                 "out_time")
+
+
+@functools.lru_cache(maxsize=64)
+def _build_batch_stepper(sig: Tuple[int, ...], ops: Tuple[str, ...]):
+    """One compiled vmapped scan for every program of one bucket signature.
+
+    Unlike :func:`_build_stepper` (which bakes one program's register
+    counts, II, and schedule times into the compiled code as constants),
+    the batched step takes them all as *data*: II drives the periodic
+    event trains, the schedule-time tables are gathered arrays, and the
+    per-program micro-op/tile counts mask the padded dispatch lanes
+    (:func:`repro.kernels.sim_step.alu_step_masked`).  Real lanes execute
+    exactly the arithmetic of the per-program stepper, so outputs are
+    bit-identical to :func:`simulate` per program.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from ..kernels.sim_step import alu_step_masked
+
+    ip, up, ep, sp, wp, lp, cp, op_, cycles, D, K, B = sig
+    tmp_off = lp + cp
+    step_slots = jnp.asarray(
+        np.arange(ip, dtype=np.int32)[None, :] * up
+        + np.arange(up, dtype=np.int32)[:, None])             # (up, ip)
+
+    def one(ii, dims, opcodes, op_src, const_pool, fire_time, ext_time,
+            wire_src, sig_tmp, sig_owner, latch_wire, latch_time,
+            latch_owner, out_wire, out_time, inputs):
+        n_steps, n_inst = dims[0], dims[1]
+        lane_act = jnp.arange(ip) < n_inst                    # (ip,)
+
+        def periodic(c, t0):
+            d = c - t0
+            k = d // ii
+            live = (d >= 0) & (d % ii == 0) & (k < K)
+            return live, jnp.clip(k, 0, K - 1)
+
+        def step(carry, c):
+            ext, sig, wire, latch, outbuf = carry
+            fire, fire_k = periodic(c, fire_time)             # (ip,)
+            rd = fire_k[latch_owner] % D                      # (lp,)
+            latch_view = jnp.take_along_axis(
+                latch, rd[None, :, None], axis=2)[:, :, 0]    # (B, lp)
+
+            constb = jnp.broadcast_to(const_pool, (B, cp))
+            operands = jnp.concatenate(
+                [latch_view, constb,
+                 jnp.zeros((B, ip * up), jnp.float32)], axis=1)
+            for u in range(up):
+                a = operands[:, op_src[:, u, 0]]
+                b = operands[:, op_src[:, u, 1]]
+                c3 = operands[:, op_src[:, u, 2]]
+                r = alu_step_masked(opcodes[:, u], a, b, c3, ops,
+                                    lane_act & (u < n_steps))
+                operands = operands.at[:, tmp_off + step_slots[u]].set(r)
+
+            sig_new = jnp.where(fire[sig_owner],
+                                operands[:, tmp_off + sig_tmp], sig)
+
+            ext_live, ext_k = periodic(c, ext_time)           # (ep,)
+            stream = inputs[:, ext_k, jnp.arange(ep)]         # (B, ep)
+            ext_new = jnp.where(ext_live, stream, ext)
+
+            src_vec = jnp.concatenate([sig, ext, wire], axis=1)
+            wire_new = src_vec[:, wire_src]
+
+            l_live, l_k = periodic(c, latch_time)
+            wr = l_k % D                                      # (lp,)
+            arriving = wire[:, latch_wire]                    # (B, lp)
+            cur = jnp.take_along_axis(
+                latch, wr[None, :, None], axis=2)[:, :, 0]
+            written = jnp.where(l_live, arriving, cur)
+            latch_new = latch.at[:, jnp.arange(lp), wr].set(written)
+
+            o_live, o_k = periodic(c, out_time)
+            vals = wire[:, out_wire]
+            cols = jnp.arange(op_)
+            prev = outbuf[:, o_k, cols]
+            outbuf = outbuf.at[:, o_k, cols].set(
+                jnp.where(o_live, vals, prev))
+
+            return (ext_new, sig_new, wire_new, latch_new, outbuf), None
+
+        carry = (jnp.zeros((B, ep), jnp.float32),
+                 jnp.zeros((B, sp), jnp.float32),
+                 jnp.zeros((B, wp), jnp.float32),
+                 jnp.zeros((B, lp, D), jnp.float32),
+                 jnp.zeros((B, K, op_), jnp.float32))
+        carry, _ = jax.lax.scan(step, carry, jnp.arange(cycles))
+        return carry[4]
+
+    return jax.jit(jax.vmap(one))
+
+
+def simulate_batch(progs: List[SimProgram], inputs_list,
+                   *, backend: str = "jax") -> List[SimResult]:
+    """Simulate many programs in ONE vmapped ``lax.scan`` dispatch.
+
+    All programs must share one :func:`sim_signature` (group by it first)
+    and all input sets one (batch, iterations) shape; the union of the
+    group's opcode tables drives one shared ALU dispatch.  Cycles beyond a
+    program's real count execute harmlessly (no capture fires past
+    iteration K-1), padded events never fire, and padded lanes retire
+    zeros — so per-program outputs are bit-identical to :func:`simulate`
+    on that program alone, regardless of which programs share the
+    dispatch.
+    """
+    import jax.numpy as jnp
+
+    from ..kernels.sim_step import op_table
+
+    if backend != "jax":
+        raise ValueError("simulate_batch supports backend='jax' only "
+                         "(the pallas tile-step kernel is per-program)")
+    if len(progs) != len(inputs_list):
+        raise ValueError("inputs_list must match progs 1:1")
+    arrs = [_coerce_inputs(p, x) for p, x in zip(progs, inputs_list)]
+    B, K, _ = arrs[0].shape
+    for a in arrs:
+        if a.shape[:2] != (B, K):
+            raise ValueError("all input sets must share one (B, K) shape; "
+                             f"got {a.shape[:2]} vs {(B, K)}")
+    sigs = {sim_signature(p, K, B) for p in progs}
+    if len(sigs) != 1:
+        raise ValueError(f"programs span {len(sigs)} sim signatures; "
+                         "group by sim_signature() first")
+    sig = next(iter(sigs))
+
+    ops = op_table(sorted(set().union(*(p.ops for p in progs)) - {"nop"}))
+    code_of = {name: k for k, name in enumerate(ops)}
+    padded = [_pad_program(p, sig, code_of) for p in progs]
+    stacked = [jnp.asarray(np.stack([d[k] for d in padded]))
+               for k in _BATCH_FIELDS]
+    inputs = np.zeros((len(progs), B, K, sig[2]), np.float32)
+    for i, (p, a) in enumerate(zip(progs, arrs)):
+        inputs[i, :, :, :p.n_ext] = a
+
+    run = _build_batch_stepper(sig, ops)
+    outbuf = np.asarray(run(*stacked, jnp.asarray(inputs)))
+
+    results = []
+    for i, p in enumerate(progs):
+        cycles = p.total_cycles(K)
+        n_fires = K * p.n_inst
+        results.append(SimResult(
+            outputs=outbuf[i][:, :, p.out_cols], ii=p.ii,
+            min_ii=p.schedule.min_ii, latency=p.latency, cycles=cycles,
+            iterations=K, n_fires=n_fires,
+            active_frac=n_fires / max(1, cycles * p.n_inst),
+            backend="jax-batch"))
+    return results
 
 
 def simulate(prog: SimProgram, inputs, *, backend: str = "jax",

@@ -78,12 +78,28 @@ def random_inputs(prog: SimProgram, iterations: int, batch: int,
     return np.round(vals).astype(np.float32)   # integral: exact in f32
 
 
-def check_against_interp(prog: SimProgram, app: Graph,
-                         inputs: np.ndarray, *, backend: str = "jax",
-                         interpret_mode: Optional[bool] = None
-                         ) -> Tuple[SimResult, float, bool]:
-    """(sim result, max |err| vs interpreter, bit-exact?)."""
-    res = simulate(prog, inputs, backend=backend, interpret=interpret_mode)
+def build_sim_batch(items, *, stats=None) -> list:
+    """Schedule and lower many placed-and-routed pairs, batch-first.
+
+    ``items``: one ``(dp, mapping, app, pnr)`` per pair.  Modulo
+    scheduling runs through
+    :func:`repro.sim.schedule.modulo_schedule_batch` (one lockstep
+    conflict-scan group per fabric signature); lowering stays per-pair
+    (cheap Python).  Returns :class:`SimProgram` objects in ``items``
+    order, bit-identical to ``build_sim(..., pnr=pnr)[0]`` per pair.
+    """
+    from .schedule import modulo_schedule_batch
+
+    scheds = modulo_schedule_batch(
+        [(pnr.netlist, pnr.placement, pnr.routes, pnr.spec)
+         for _, _, _, pnr in items], stats=stats)
+    return [lower_program(mapping, app, pnr.netlist, pnr.placement, sched)
+            for (_, mapping, app, pnr), sched in zip(items, scheds)]
+
+
+def compare_with_interp(prog: SimProgram, app: Graph, inputs: np.ndarray,
+                        res: SimResult) -> Tuple[float, bool]:
+    """(max |err| vs interpreter, bit-exact?) for a precomputed result."""
     B, K, _ = inputs.shape
     feed: Dict[str, np.ndarray] = {
         name: inputs[:, :, j].reshape(-1)
@@ -102,6 +118,16 @@ def check_against_interp(prog: SimProgram, app: Graph,
         expect = np.asarray(want[j], np.float32)
         exact = exact and np.array_equal(got, expect)
         err = max(err, float(np.max(np.abs(got - expect), initial=0.0)))
+    return err, exact
+
+
+def check_against_interp(prog: SimProgram, app: Graph,
+                         inputs: np.ndarray, *, backend: str = "jax",
+                         interpret_mode: Optional[bool] = None
+                         ) -> Tuple[SimResult, float, bool]:
+    """(sim result, max |err| vs interpreter, bit-exact?)."""
+    res = simulate(prog, inputs, backend=backend, interpret=interpret_mode)
+    err, exact = compare_with_interp(prog, app, inputs, res)
     return res, err, exact
 
 

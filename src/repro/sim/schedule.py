@@ -38,7 +38,9 @@ from __future__ import annotations
 
 import heapq
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Set, Tuple
+from typing import Dict, Generator, List, Optional, Set, Tuple
+
+import numpy as np
 
 from ..fabric.arch import Coord, FabricSpec
 from ..fabric.netlist import Netlist
@@ -289,6 +291,97 @@ def modulo_schedule(netlist: Netlist, placement: Placement,
     raise RuntimeError(f"no modulo schedule found up to II={max_ii}")
 
 
+def fabric_signature(spec: FabricSpec) -> Tuple[int, int, int, int]:
+    """Key under which pairs share one lockstep scheduling group.
+
+    Grouping is purely a batching decision — every pair's schedule is
+    bit-identical however pairs are grouped (or scheduled solo); sharing
+    array dimensions just keeps a round's stacked conflict scans similarly
+    sized, so no pair pads the others' windows.
+    """
+    return (spec.rows, spec.cols, spec.io_capacity, spec.latch_depth)
+
+
+class _PairSched:
+    """Lockstep driver state for one pair in a scheduling group."""
+
+    __slots__ = ("index", "p", "timing", "rec_mii", "res_mii", "heights",
+                 "depth", "ii", "max_ii", "attempts", "gen", "req")
+
+
+def modulo_schedule_batch(items: List[Tuple[Netlist, Placement, RouteResult,
+                                            FabricSpec]],
+                          *, max_ii: Optional[int] = None,
+                          budget_factor: int = 8,
+                          stats=None) -> List[ModuloSchedule]:
+    """Modulo-schedule many placed-and-routed pairs, batch-first.
+
+    Pairs are grouped by :func:`fabric_signature`; within a group every
+    pair's Rau coroutine advances in lockstep and ALL pending slot-conflict
+    scans are answered by one stacked numpy gather per round
+    (:func:`_feasible_scan_batch`), instead of one Python probe-loop per
+    candidate cycle per pair.  Each pair's schedule is bit-identical to
+    :func:`modulo_schedule` on that pair alone.  ``stats`` (a Counter, if
+    given) gets one ``sched_group`` tick per lockstep group.  Returns
+    schedules in ``items`` order.
+    """
+    out: List[Optional[ModuloSchedule]] = [None] * len(items)
+    groups: Dict[Tuple, List[int]] = {}
+    for i, (_, _, _, spec) in enumerate(items):
+        groups.setdefault(fabric_signature(spec), []).append(i)
+    for idxs in groups.values():
+        if stats is not None:
+            stats["sched_group"] += 1
+        _schedule_group(items, idxs, out, max_ii, budget_factor)
+    return out
+
+
+def _schedule_group(items, idxs: List[int], out: List,
+                    max_ii: Optional[int], budget_factor: int) -> None:
+    pairs: List[_PairSched] = []
+    for i in idxs:
+        netlist, placement, routes, spec = items[i]
+        st = _PairSched()
+        st.index = i
+        st.p, st.timing = _build_problem(netlist, placement, routes)
+        st.rec_mii, st.res_mii = _min_ii(st.p, routes, spec)
+        st.ii = max(st.rec_mii, st.res_mii)
+        st.max_ii = (st.ii + len(st.p.ops) + 1) if max_ii is None else max_ii
+        st.heights = _heights(st.p)
+        st.depth = spec.latch_depth
+        st.attempts = 0
+        pairs.append(st)
+
+    def start(st: _PairSched) -> bool:
+        """Open a new II attempt; True while the pair still wants scans."""
+        st.attempts += 1
+        st.gen = _schedule_gen(st.p, st.ii, st.heights, budget_factor,
+                               st.depth)
+        return advance(st, None)
+
+    def advance(st: _PairSched, ans: Optional[int]) -> bool:
+        try:
+            st.req = st.gen.send(ans)
+            return True
+        except StopIteration as stop:
+            if stop.value is not None:
+                out[st.index] = _finish(st.p, st.timing, st.ii, st.rec_mii,
+                                        st.res_mii, stop.value, st.attempts,
+                                        st.depth)
+                return False
+            st.ii += 1                    # this II failed; retry one higher
+            if st.ii > st.max_ii:
+                raise RuntimeError(
+                    f"no modulo schedule found up to II={st.max_ii}")
+            return start(st)
+
+    active = [st for st in pairs if start(st)]
+    while active:
+        answers = _feasible_scan_batch([st.req for st in active])
+        active = [st for st, ans in zip(active, answers)
+                  if advance(st, ans)]
+
+
 def _slots_needed(p: _Problem, op: OpKey, t: int,
                   ii: int) -> List[Tuple[Coord, int]]:
     slots = [(p.tile_of[op], t % ii)]
@@ -297,9 +390,103 @@ def _slots_needed(p: _Problem, op: OpKey, t: int,
     return slots
 
 
-def _try_schedule(p: _Problem, ii: int, heights: Dict[OpKey, int],
+@dataclass
+class _ScanReq:
+    """One first-feasible-slot query against a pair's occupancy table.
+
+    The occupancy array mirrors the MRT dict exactly (``occ[tile, slot]``
+    is true iff ``(tile coord, slot)`` is reserved); tiles are indexed by
+    the pair-local table the emitting coroutine built.
+    """
+
+    occ: np.ndarray              # (n_tiles, ii) bool
+    ii: int
+    tiles: np.ndarray            # (S,) int64: occ row per required slot
+    offs: np.ndarray             # (S,) int64: cycle offset per required slot
+    early: int
+    hi: int
+
+
+def _feasible_scan(req: _ScanReq) -> Optional[int]:
+    """First t in [early, hi] with every required slot free, else None."""
+    if req.hi < req.early:
+        return None
+    ts = np.arange(req.early, req.hi + 1)
+    slots = (ts[:, None] + req.offs[None, :]) % req.ii
+    conflict = req.occ[req.tiles[None, :], slots].any(axis=1)
+    if conflict.all():
+        return None
+    return int(req.early + int(np.argmin(conflict)))
+
+
+def _feasible_scan_batch(reqs: List[_ScanReq]) -> List[Optional[int]]:
+    """Answer many scan requests in ONE stacked numpy gather.
+
+    Every pending pair's candidate window is padded to the round's widest
+    window and largest slot set; per-pair occupancy tables are flattened
+    into one buffer so the whole round is a single fancy-index + reduce
+    instead of one Python probe-loop per candidate cycle per pair.
+    Answers are identical to :func:`_feasible_scan` per request.
+    """
+    n = len(reqs)
+    width = max(max(r.hi - r.early + 1 for r in reqs), 1)
+    n_slots = max(r.tiles.shape[0] for r in reqs)
+    sizes = np.asarray([r.occ.size for r in reqs])
+    base = np.concatenate([[0], np.cumsum(sizes)[:-1]])
+    occ_flat = np.concatenate([r.occ.ravel() for r in reqs])
+    ii = np.asarray([r.ii for r in reqs])
+    early = np.asarray([r.early for r in reqs])
+    hi = np.asarray([r.hi for r in reqs])
+    tiles = np.zeros((n, n_slots), np.int64)
+    offs = np.zeros((n, n_slots), np.int64)
+    smask = np.zeros((n, n_slots), bool)
+    for i, r in enumerate(reqs):
+        s = r.tiles.shape[0]
+        tiles[i, :s] = r.tiles
+        offs[i, :s] = r.offs
+        smask[i, :s] = True
+    ts = early[:, None] + np.arange(width)[None, :]            # (n, W)
+    wmask = ts <= hi[:, None]
+    slots = (ts[:, :, None] + offs[:, None, :]) % ii[:, None, None]
+    idx = (base[:, None, None] + tiles[:, None, :] * ii[:, None, None]
+           + slots)                                            # (n, W, S)
+    conflict = occ_flat[idx] & smask[:, None, :]
+    bad = conflict.any(axis=2) | ~wmask
+    out: List[Optional[int]] = []
+    for i in range(n):
+        w = int(np.argmin(bad[i]))
+        out.append(None if bad[i, w] else int(early[i] + w))
+    return out
+
+
+def _schedule_gen(p: _Problem, ii: int, heights: Dict[OpKey, int],
                   budget_factor: int, depth: int
-                  ) -> Optional[Dict[OpKey, int]]:
+                  ) -> Generator[_ScanReq, Optional[int],
+                                 Optional[Dict[OpKey, int]]]:
+    """Rau's inner loop as a coroutine: yields slot-conflict scan requests
+    (answered with the first feasible cycle, or None) and returns the
+    start map — or None when the eviction budget is exhausted.
+
+    Driving it solo (:func:`_try_schedule`) or in lockstep with other
+    pairs (:func:`modulo_schedule_batch`) produces identical schedules:
+    the trajectory depends only on this pair's own state, never on who
+    answers the scans.
+    """
+    tix: Dict[Coord, int] = {}
+    for op in p.ops:
+        tix.setdefault(p.tile_of[op], len(tix))
+    for ev in p.captures:
+        tix.setdefault(ev.tile, len(tix))
+    occ = np.zeros((max(1, len(tix)), ii), bool)
+    scan_tiles: Dict[OpKey, np.ndarray] = {}
+    scan_offs: Dict[OpKey, np.ndarray] = {}
+    for op in p.ops:
+        caps = p.caps_of[op]
+        scan_tiles[op] = np.asarray(
+            [tix[p.tile_of[op]]] + [tix[ev.tile] for ev in caps], np.int64)
+        scan_offs[op] = np.asarray(
+            [0] + [L_OUT + ev.hops for ev in caps], np.int64)
+
     time: Dict[OpKey, int] = {}
     mrt: Dict[Tuple[Coord, int], OpKey] = {}
     order_ix = {op: i for i, op in enumerate(p.ops)}
@@ -308,12 +495,21 @@ def _try_schedule(p: _Problem, ii: int, heights: Dict[OpKey, int],
         heapq.heappush(heap, (-heights[op], order_ix[op], op))
     last_placed: Dict[OpKey, int] = {}
     budget = budget_factor * len(p.ops) + 64
+    hold = depth * ii
+
+    def occupy(op: OpKey, t: int) -> None:
+        time[op] = t
+        for s in _slots_needed(p, op, t, ii):
+            mrt[s] = op
+            occ[tix[s[0]], s[1]] = True
+        last_placed[op] = t
 
     def unschedule(op: OpKey) -> None:
         t = time.pop(op)
         for slot in _slots_needed(p, op, t, ii):
             if mrt.get(slot) == op:
                 del mrt[slot]
+                occ[tix[slot[0]], slot[1]] = False
         heapq.heappush(heap, (-heights[op], order_ix[op], op))
 
     while heap:
@@ -321,7 +517,6 @@ def _try_schedule(p: _Problem, ii: int, heights: Dict[OpKey, int],
         if op in time:
             continue                      # stale heap entry
         # dependence window w.r.t. already-scheduled neighbors
-        hold = depth * ii
         early, late = 0, 1 << 30
         for e in p.preds[op]:
             if e.src in time:
@@ -335,17 +530,10 @@ def _try_schedule(p: _Problem, ii: int, heights: Dict[OpKey, int],
                 late = min(late, time[e.dst] - e.hops - L_OUT - L_LATCH)
         early = max(early, 0)
 
-        placed = False
-        hi = min(late, early + ii - 1)
-        for t in range(early, hi + 1):
-            if all(s not in mrt for s in _slots_needed(p, op, t, ii)):
-                time[op] = t
-                for s in _slots_needed(p, op, t, ii):
-                    mrt[s] = op
-                last_placed[op] = t
-                placed = True
-                break
-        if placed:
+        t = yield _ScanReq(occ, ii, scan_tiles[op], scan_offs[op],
+                           early, min(late, early + ii - 1))
+        if t is not None:
+            occupy(op, t)
             continue
 
         # forced placement with eviction (Rau)
@@ -369,11 +557,22 @@ def _try_schedule(p: _Problem, ii: int, heights: Dict[OpKey, int],
                     evict.add(e.dst)
         for other in sorted(evict, key=lambda o: order_ix[o]):
             unschedule(other)
-        time[op] = t
-        for s in _slots_needed(p, op, t, ii):
-            mrt[s] = op
-        last_placed[op] = t
+        occupy(op, t)
     return time
+
+
+def _try_schedule(p: _Problem, ii: int, heights: Dict[OpKey, int],
+                  budget_factor: int, depth: int
+                  ) -> Optional[Dict[OpKey, int]]:
+    """Drive one pair's scheduling coroutine solo."""
+    gen = _schedule_gen(p, ii, heights, budget_factor, depth)
+    ans: Optional[int] = None
+    while True:
+        try:
+            req = gen.send(ans)
+        except StopIteration as stop:
+            return stop.value
+        ans = _feasible_scan(req)
 
 
 def _finish(p: _Problem, timing: Dict[str, NetTiming], ii: int,

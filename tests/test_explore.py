@@ -40,7 +40,7 @@ def camera():
 #: frozen golden schema — changing ExploreRecord requires bumping
 #: RECORD_SCHEMA and updating this list in the same commit
 RECORD_FIELDS = [
-    "schema", "mode", "config_key", "n_merged",
+    "schema", "mode", "config_key", "n_merged", "sim_bucket",
     "app", "pe_name", "n_pes", "total_ops", "pe_area_um2", "total_area_um2",
     "energy_pj", "energy_per_op_pj", "fmax_ghz", "ops_per_pe", "unmapped",
     "cgra_area_um2", "cgra_energy_pj", "cgra_energy_per_op_pj",
@@ -56,7 +56,7 @@ def test_record_golden_schema_and_jsonl_round_trip(tmp_path):
         == RECORD_FIELDS
     # the AppCost column subset must track costmodel.AppCost exactly
     appcost_fields = [f.name for f in dataclasses.fields(AppCost)]
-    assert RECORD_FIELDS[4:] == appcost_fields
+    assert RECORD_FIELDS[5:] == appcost_fields
 
     cost = AppCost(app="a", pe_name="PE1", n_pes=3, total_ops=7,
                    pe_area_um2=1.5, total_area_um2=4.5, energy_pj=2.0,
@@ -84,7 +84,7 @@ def test_explore_config_json_round_trip():
         per_app_subgraphs=3, domain_name="PE_X",
         fabric=FabricOptions(spec=FabricSpec(rows=6, cols=5), chains=3,
                              sweeps=9, seed=7, simulate=True),
-        pnr_batch="serial")
+        pnr_batch="serial", sim_batch="serial")
     blob = json.dumps(cfg.to_dict())
     assert ExploreConfig.from_dict(json.loads(blob)) == cfg
     # no-fabric config round-trips too
@@ -101,6 +101,8 @@ def test_config_rejects_bad_values():
         ExploreConfig(mode="nope")
     with pytest.raises(ValueError, match="pnr_batch"):
         ExploreConfig(pnr_batch="nope")
+    with pytest.raises(ValueError, match="sim_batch"):
+        ExploreConfig(sim_batch="nope")
     with pytest.raises(ValueError, match="rank_mode"):
         ExploreConfig(rank_mode="nope")
 
@@ -204,6 +206,47 @@ def test_anneal_jax_batch_grouping_independent():
                               p.net_mask) == pytest.approx(costs[best])
         for c in range(slots.shape[0]):
             assert sorted(slots[c]) == list(range(p.n_entities))
+
+
+# ---------------------------------------------------------------------------
+# batch-first schedule/simulate
+# ---------------------------------------------------------------------------
+def test_sim_stage_grouped_matches_serial():
+    """The batched schedule/simulate stages are a pure throughput change:
+    II, latency, verification flags, and every record column except the
+    sim_bucket provenance must match the per-pair loop exactly."""
+    apps = {"conv": conv_app()}
+    fabric = FabricOptions(spec=FabricSpec(rows=4, cols=4), chains=2,
+                           sweeps=4, simulate=True)
+    cfg = ExploreConfig(mode="per_app",
+                        mining=MiningConfig(min_support=2,
+                                            max_pattern_nodes=5),
+                        max_merge=2, fabric=fabric)
+    grouped_ex = Explorer(apps, cfg)
+    grouped = grouped_ex.run()
+    assert grouped_ex.stats["sim_dispatch"] >= 1
+    assert grouped_ex.stats["sched_group"] >= 1
+    serial = Explorer(apps, cfg.replace(sim_batch="serial")).run()
+
+    g_rows = grouped.records()
+    s_rows = serial.records()
+    assert len(g_rows) == len(s_rows) > 0
+    for g, s in zip(g_rows, s_rows):
+        assert g.sim_ii == s.sim_ii > 0
+        assert g.sim_verified == s.sim_verified == 1
+        assert g.sim_bucket != "serial" and s.sim_bucket == "serial"
+        gd, sd = g.to_dict(), s.to_dict()
+        for d in (gd, sd):
+            d.pop("sim_bucket")
+            d.pop("config_key")        # differs: sim_batch is in the config
+        assert gd == sd
+
+    # flipping sim_batch re-uses every stage upstream of schedule
+    upstream = {k: grouped_ex.stats[k]
+                for k in ("mine", "rank", "merge", "map", "pnr")}
+    ex2 = grouped_ex.with_config(sim_batch="serial")
+    ex2.run()
+    assert {k: ex2.stats[k] for k in upstream} == upstream
 
 
 # ---------------------------------------------------------------------------

@@ -196,3 +196,55 @@ def test_property_simulated_array_equals_interp(app):
                             iterations=2, batch=2, place_backend="python",
                             chains=1, sweeps=8)
     assert report.bit_exact and report.max_abs_err == 0.0, report.row()
+
+
+# ---------------------------------------------------------------------------
+# batch-first schedule/simulate: grouping never changes a bit
+# ---------------------------------------------------------------------------
+@settings(max_examples=8, deadline=None)
+@given(apps=st.lists(random_app_graph(), min_size=2, max_size=3),
+       seed=st.integers(0, 1000))
+def test_property_sim_batch_independent_of_grouping(apps, seed):
+    """Random graphs, random seeds: batched modulo schedules equal the
+    per-pair schedules exactly, and batched simulation returns the same
+    bits whether a program runs alone, with its bucket-mates, or in any
+    other bucket composition — the serial per-pair result is the
+    grouping-independent reference both must hit."""
+    from repro.core import baseline_datapath, map_application
+    from repro.core.dse import app_ops
+    from repro.fabric import FabricSpec, place_and_route
+    from repro.sim import (build_sim, build_sim_batch, random_inputs,
+                           sim_signature, simulate, simulate_batch)
+
+    items, solo_progs = [], []
+    for i, app in enumerate(apps):
+        dp = baseline_datapath(app_ops(app))
+        mapping = map_application(dp, app, f"prop{i}")
+        assert not mapping.unmapped
+        pnr = place_and_route(dp, mapping, app, FabricSpec(4, 4),
+                              backend="python", chains=1, sweeps=4,
+                              seed=seed)
+        items.append((dp, mapping, app, pnr))
+        solo_progs.append(build_sim(dp, mapping, app, pnr=pnr)[0])
+
+    batch_progs = build_sim_batch(items)
+    for s, b in zip(solo_progs, batch_progs):
+        assert b.ii == s.ii and b.latency == s.latency
+        assert b.schedule.start == s.schedule.start
+
+    inputs = [random_inputs(p, 2, 2, seed=seed + i)
+              for i, p in enumerate(solo_progs)]
+    serial = [simulate(p, x) for p, x in zip(solo_progs, inputs)]
+    # one grouping: singletons
+    for i, p in enumerate(batch_progs):
+        res = simulate_batch([p], [inputs[i]])[0]
+        assert np.array_equal(res.outputs, serial[i].outputs)
+    # another grouping: full buckets
+    by_sig = {}
+    for i, p in enumerate(batch_progs):
+        by_sig.setdefault(sim_signature(p, 2, 2), []).append(i)
+    for idxs in by_sig.values():
+        batch = simulate_batch([batch_progs[i] for i in idxs],
+                               [inputs[i] for i in idxs])
+        for i, res in zip(idxs, batch):
+            assert np.array_equal(res.outputs, serial[i].outputs)

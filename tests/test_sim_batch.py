@@ -1,0 +1,152 @@
+"""Batch-first schedule/simulate: the batched paths must be bit-identical
+to the per-pair paths, regardless of how pairs are grouped.
+
+The contract mirrors the one the batched placer met in the pnr stage:
+padding is per-program (bucket shapes), seeding is content-derived, and
+grouping is purely a throughput decision — never visible in the results.
+"""
+
+import zlib
+from collections import defaultdict
+
+import numpy as np
+import pytest
+
+from repro.apps import image_graphs
+from repro.core import baseline_datapath, map_application
+from repro.core.dse import app_ops
+from repro.fabric import FabricSpec, place_and_route
+from repro.sim import (build_sim, build_sim_batch, fabric_signature,
+                       modulo_schedule, modulo_schedule_batch, random_inputs,
+                       sim_signature, simulate, simulate_batch)
+
+SPEC = FabricSpec(rows=8, cols=8)
+FAST = dict(backend="python", chains=1, sweeps=8)
+
+
+def _pnr(name, app):
+    dp = baseline_datapath(app_ops(app))
+    mapping = map_application(dp, app, name)
+    return dp, mapping, place_and_route(dp, mapping, app, SPEC, **FAST)
+
+
+@pytest.fixture(scope="module")
+def fig8_pnrs():
+    """The paper's Fig. 8 image apps, placed and routed (camera and
+    laplacian auto-fit beyond 8x8, so the batch spans several fabric
+    signatures — singleton and multi-pair lockstep groups both run)."""
+    apps = image_graphs()
+    return {name: (_pnr(name, app), app) for name, app in apps.items()}
+
+
+# ---------------------------------------------------------------------------
+# schedule batching: lockstep == solo, per pair
+# ---------------------------------------------------------------------------
+def test_schedule_batch_ii_equivalence_fig8(fig8_pnrs):
+    items, solo = [], []
+    for name, ((dp, mapping, pnr), app) in sorted(fig8_pnrs.items()):
+        items.append((pnr.netlist, pnr.placement, pnr.routes, pnr.spec))
+        solo.append(modulo_schedule(pnr.netlist, pnr.placement, pnr.routes,
+                                    pnr.spec))
+    batch = modulo_schedule_batch(items)
+    assert len(batch) == len(solo)
+    for s, b in zip(solo, batch):
+        assert b.ii == s.ii and b.min_ii == s.min_ii
+        assert b.start == s.start                  # full schedule, not just II
+        assert b.latency == s.latency and b.attempts == s.attempts
+        assert b.hop_time == s.hop_time and b.capture == s.capture
+
+
+def test_schedule_batch_groups_by_fabric_signature(fig8_pnrs):
+    sigs = {fabric_signature(pnr.spec)
+            for (_, _, pnr), _ in fig8_pnrs.values()}
+    assert len(sigs) > 1                # camera/laplacian auto-fit past 8x8
+    from collections import Counter
+    stats = Counter()
+    items = [(pnr.netlist, pnr.placement, pnr.routes, pnr.spec)
+             for (_, _, pnr), _ in (fig8_pnrs[k] for k in sorted(fig8_pnrs))]
+    modulo_schedule_batch(items, stats=stats)
+    assert stats["sched_group"] == len(sigs)
+
+
+def test_build_sim_batch_matches_build_sim(fig8_pnrs):
+    (dp, mapping, pnr), app = fig8_pnrs["gaussian"]
+    solo, _ = build_sim(dp, mapping, app, pnr=pnr)
+    batch = build_sim_batch([(dp, mapping, app, pnr)])
+    assert len(batch) == 1
+    assert batch[0].ii == solo.ii
+    assert np.array_equal(batch[0].opcodes, solo.opcodes)
+    assert np.array_equal(batch[0].fire_time, solo.fire_time)
+
+
+# ---------------------------------------------------------------------------
+# simulate batching: one vmapped scan == per-program scans, bit for bit
+# ---------------------------------------------------------------------------
+def test_simulate_batch_bit_identical_and_grouping_independent(fig8_pnrs):
+    progs, inputs, serial = {}, {}, {}
+    for name in ("gaussian", "harris"):
+        (dp, mapping, pnr), app = fig8_pnrs[name]
+        prog, _ = build_sim(dp, mapping, app, pnr=pnr)
+        progs[name] = prog
+        inputs[name] = random_inputs(prog, 3, 2,
+                                     seed=zlib.crc32(name.encode()) & 0xFFFF)
+        serial[name] = simulate(prog, inputs[name])
+
+    # singleton batches: padding alone must not change a single bit
+    for name, prog in progs.items():
+        res = simulate_batch([prog], [inputs[name]])[0]
+        assert np.array_equal(res.outputs, serial[name].outputs)
+        assert res.ii == serial[name].ii
+        assert res.cycles == serial[name].cycles
+
+    # grouped batches: members read the same outputs they read alone
+    by_sig = defaultdict(list)
+    for name, prog in progs.items():
+        by_sig[sim_signature(prog, 3, 2)].append(name)
+    for members in by_sig.values():
+        batch = simulate_batch([progs[n] for n in members],
+                               [inputs[n] for n in members])
+        for n, res in zip(members, batch):
+            assert np.array_equal(res.outputs, serial[n].outputs), n
+
+
+def test_simulate_batch_rejects_bad_groups(fig8_pnrs):
+    (dp, mapping, pnr), app = fig8_pnrs["gaussian"]
+    prog, _ = build_sim(dp, mapping, app, pnr=pnr)
+    x = random_inputs(prog, 2, 1, seed=0)
+    with pytest.raises(ValueError, match="backend"):
+        simulate_batch([prog], [x], backend="pallas")
+    with pytest.raises(ValueError, match="1:1"):
+        simulate_batch([prog], [x, x])
+    # mixed (B, K) shapes cannot share a dispatch
+    with pytest.raises(ValueError):
+        simulate_batch([prog, prog], [x, random_inputs(prog, 3, 2, seed=0)])
+
+
+def test_sim_signature_floors_are_static():
+    """Bucket floors must stay constants: a program's bucket (and padded
+    lowering) may depend only on the program itself."""
+    from repro.sim.cycle import _SIG_FLOORS
+    from repro.kernels.tiling import pow2_bucket
+    assert all(f == pow2_bucket(f) for f in _SIG_FLOORS)
+
+
+# ---------------------------------------------------------------------------
+# kernels: masked dispatch == plain dispatch on active lanes, 0 elsewhere
+# ---------------------------------------------------------------------------
+def test_alu_step_masked_matches_jnp_on_active_lanes():
+    from repro.kernels.sim_step import (alu_step_jnp, alu_step_masked,
+                                        op_table)
+
+    ops = op_table(["add", "mul", "sub", "max"])
+    rng = np.random.default_rng(3)
+    n, b = 24, 4
+    codes = rng.integers(0, len(ops), n).astype(np.int32)
+    a = rng.standard_normal((b, n)).astype(np.float32)
+    bb = rng.standard_normal((b, n)).astype(np.float32)
+    c = rng.standard_normal((b, n)).astype(np.float32)
+    active = rng.integers(0, 2, n).astype(bool)
+    want = np.asarray(alu_step_jnp(codes, a, bb, c, ops))
+    got = np.asarray(alu_step_masked(codes, a, bb, c, ops, active))
+    assert np.array_equal(got[:, active], want[:, active])
+    assert np.all(got[:, ~active] == 0.0)
