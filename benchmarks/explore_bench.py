@@ -29,6 +29,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import sys
 import time
 
 from repro.apps import ml_graphs
@@ -48,6 +49,30 @@ def _write(result: dict, out_path: str) -> None:
         f.write("\n")
 
 
+def _counter_snapshot(registry) -> dict:
+    return dict(registry.to_dict()["counters"])
+
+
+def _metrics_block(registry, before: dict, keys) -> dict:
+    """Registry counter deltas for the BENCH json ``metrics`` block.
+
+    Keys must stay inside ``results/check_bench.py``'s METRIC_KEYS
+    contract; dotted counter families (``memo.hit.*`` -> ``memo_hit``)
+    are summed.  The gate cross-checks the dispatch entries against the
+    top-level claims, so these numbers are the registry speaking, not a
+    hand-maintained copy.
+    """
+    after = _counter_snapshot(registry)
+    families = {"memo_hit": "memo.hit", "memo_miss": "memo.miss",
+                "compile_events": "jax.compile.events"}
+    block = {}
+    for key in keys:
+        prefix = families.get(key, key)
+        block[key] = sum(v - before.get(k, 0) for k, v in after.items()
+                         if k == prefix or k.startswith(prefix + "."))
+    return block
+
+
 def run(out_path: str = DEFAULT_OUT, smoke: bool = False) -> dict:
     apps = ml_graphs()
     fabric = FabricOptions(
@@ -60,6 +85,8 @@ def run(out_path: str = DEFAULT_OUT, smoke: bool = False) -> dict:
     # shared upstream artifacts: both modes see identical mappings
     base = Explorer(apps, cfg)
     base.map()
+    from repro.obs import jaxprof
+    jaxprof.enable(registry=base.metrics)
 
     def timed_pnr(pnr_batch: str):
         # fresh annealer programs per mode (cold caches emulate a fresh
@@ -79,7 +106,9 @@ def run(out_path: str = DEFAULT_OUT, smoke: bool = False) -> dict:
         return dt, pnrs, ex.stats["pnr_dispatch"] - before
 
     serial_s, serial_pnrs, serial_disp = timed_pnr("serial")
+    before = _counter_snapshot(base.metrics)
     grouped_s, grouped_pnrs, grouped_disp = timed_pnr("grouped")
+    jaxprof.disable()
 
     pairs = len(serial_pnrs)
     assert len(grouped_pnrs) == pairs
@@ -102,6 +131,11 @@ def run(out_path: str = DEFAULT_OUT, smoke: bool = False) -> dict:
         "serial_s": round(serial_s, 3),
         "grouped_s": round(grouped_s, 3),
         "speedup": round(speedup, 2),
+        # registry deltas for the grouped run — check_bench.py asserts
+        # pnr_dispatch agrees with grouped_dispatches above
+        "metrics": _metrics_block(base.metrics, before,
+                                  ("pnr_dispatch", "memo_miss", "memo_hit",
+                                   "compile_events")),
         "note": "pnr stage only, shared upstream artifacts, cold annealer "
                 "caches (includes jit compiles — the cost of a fresh "
                 "exploration)",
@@ -140,6 +174,8 @@ def run_sim(out_path: str = DEFAULT_SIM_OUT, smoke: bool = False) -> dict:
     # shared upstream artifacts: both modes schedule the same placements
     base = Explorer(apps, cfg)
     base.pnr()
+    from repro.obs import jaxprof
+    jaxprof.enable(registry=base.metrics)
 
     def timed(sim_batch: str):
         # cold compile caches emulate a fresh exploration; the sched/sim
@@ -154,7 +190,13 @@ def run_sim(out_path: str = DEFAULT_SIM_OUT, smoke: bool = False) -> dict:
         return dt, progs, flags, {k: ex.stats[k] - d0[k] for k in d0}
 
     serial_s, serial_progs, serial_flags, _ = timed("serial")
+    before = _counter_snapshot(base.metrics)
     grouped_s, grouped_progs, grouped_flags, disp = timed("grouped")
+    metrics_block = _metrics_block(
+        base.metrics, before,
+        ("sim_dispatch", "sched_group", "sched_rounds", "sched_backtracks",
+         "memo_miss", "memo_hit", "compile_events"))
+    jaxprof.disable()
 
     pairs = sorted(serial_progs)
     assert sorted(grouped_progs) == pairs
@@ -202,6 +244,9 @@ def run_sim(out_path: str = DEFAULT_SIM_OUT, smoke: bool = False) -> dict:
         "bit_identical": bit_identical,
         "ii_identical": ii_identical,
         "verified": verified,
+        # registry deltas for the grouped run — check_bench.py asserts the
+        # dispatch/group entries agree with the claims above
+        "metrics": metrics_block,
         "note": "schedule+simulate stages only, shared pnr artifacts, cold "
                 "stepper caches (includes jit compiles — the cost of a "
                 "fresh simulate=True exploration)",
@@ -230,12 +275,25 @@ def main() -> None:
                          "of pnr (writes BENCH_sim_batch.json)")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced budget + speedup>1 assertion (CI)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="also write a Chrome trace of the benchmark run "
+                         "(open in Perfetto / `python -m repro.obs.report`)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    if args.simulate:
-        run_sim(args.out or DEFAULT_SIM_OUT, smoke=args.smoke)
-    else:
-        run(args.out or DEFAULT_OUT, smoke=args.smoke)
+    if args.trace:
+        from repro import obs
+        obs.enable_tracing()
+    try:
+        if args.simulate:
+            run_sim(args.out or DEFAULT_SIM_OUT, smoke=args.smoke)
+        else:
+            run(args.out or DEFAULT_OUT, smoke=args.smoke)
+    finally:
+        if args.trace:
+            tracer = obs.disable_tracing()
+            os.makedirs(os.path.dirname(args.trace) or ".", exist_ok=True)
+            tracer.write_chrome(args.trace)
+            print(f"# trace -> {args.trace}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -36,11 +36,51 @@ def _ratio(data: Dict, path: str, key: str, errors: List[str],
         errors.append(f"{path}: {key}={val!r}, expected >= {floor}")
 
 
+#: every key a BENCH metrics block may carry — sourced from the explorer's
+#: repro.obs metrics registry by benchmarks/explore_bench.py.  An unknown
+#: key fails the gate loudly, so renaming a counter forces updating the
+#: contract (and the committed artifacts) in the same change.
+METRIC_KEYS = frozenset({
+    "pnr_dispatch", "sim_dispatch", "sched_group", "sched_attempts",
+    "sched_rounds", "sched_scans", "sched_backtracks",
+    "memo_hit", "memo_miss", "compile_events", "compile_secs",
+})
+
+
+def _metrics(data: Dict, path: str, errors: List[str],
+             expect: Dict[str, str]) -> None:
+    """Validate the registry-sourced ``metrics`` block.
+
+    Unknown keys fail loudly; every value must be a non-negative number;
+    ``expect`` maps metric keys to top-level fields they must agree with
+    (the CI-claimed dispatch counts come from the metrics registry, so a
+    drift between the two means the instrumentation lies).
+    """
+    block = data.get("metrics")
+    if not isinstance(block, dict):
+        errors.append(f"{path}: missing metrics block (regenerate with "
+                      f"benchmarks/explore_bench.py)")
+        return
+    for key, val in sorted(block.items()):
+        if key not in METRIC_KEYS:
+            errors.append(f"{path}: unknown metric key {key!r} — add it to "
+                          f"METRIC_KEYS in results/check_bench.py")
+        elif not isinstance(val, (int, float)) or val < 0:
+            errors.append(f"{path}: metrics[{key!r}]={val!r}, expected a "
+                          f"non-negative number")
+    for key, field in expect.items():
+        if key in block and block[key] != data.get(field):
+            errors.append(f"{path}: metrics[{key!r}]={block[key]!r} != "
+                          f"{field}={data.get(field)!r}")
+
+
 def check_explore_pnr(data: Dict, path: str, errors: List[str]) -> str:
     """Batched pnr must beat the serial loop and never add dispatches."""
     _ratio(data, path, "speedup", errors)
     if data.get("grouped_dispatches", 0) > data.get("serial_dispatches", 0):
         errors.append(f"{path}: grouped used more dispatches than serial")
+    _metrics(data, path, errors,
+             expect={"pnr_dispatch": "grouped_dispatches"})
     return (f"speedup={data.get('speedup')}x "
             f"({data.get('serial_dispatches')}->"
             f"{data.get('grouped_dispatches')} dispatches)")
@@ -52,6 +92,9 @@ def check_explore_sim(data: Dict, path: str, errors: List[str]) -> str:
     _flag(data, path, "bit_identical", errors)
     _flag(data, path, "ii_identical", errors)
     _flag(data, path, "verified", errors)
+    _metrics(data, path, errors,
+             expect={"sim_dispatch": "grouped_sim_dispatches",
+                     "sched_group": "grouped_sched_groups"})
     return (f"speedup={data.get('speedup')}x "
             f"({data.get('serial_compiles')}->"
             f"{data.get('grouped_sim_dispatches')} dispatches, bit-exact)")

@@ -87,10 +87,20 @@ def dryrun_table(rows):
     return "\n".join(out)
 
 
+def stages_table(path):
+    """Markdown stage-timing table from a pipeline trace (Chrome JSON or
+    flat jsonl, as written by ``python -m repro.explore --trace``)."""
+    from repro.obs.report import load_trace_rows, stage_table
+    return stage_table(load_trace_rows(path), markdown=True)
+
+
 if __name__ == "__main__":
-    rows = load(sys.argv[1] if len(sys.argv) > 1 else
-                "results/baseline.jsonl")
+    path = sys.argv[1] if len(sys.argv) > 1 else "results/baseline.jsonl"
     which = sys.argv[2] if len(sys.argv) > 2 else "roofline"
+    if which == "stages":
+        print(stages_table(path))
+        sys.exit(0)
+    rows = load(path)
     if which == "roofline":
         table, skips = roofline_table(rows)
         print(table)

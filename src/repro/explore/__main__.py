@@ -9,6 +9,13 @@ Subcommands::
 
 ``--dump-config`` writes the resolved :class:`ExploreConfig` as JSON; the
 same exploration replays later with ``--config cfg.json``.
+
+``--trace [PATH]`` records every pipeline stage (plus jax compile
+events and anneal/scheduler telemetry) and writes Chrome trace-event
+JSON — load it in Perfetto, or summarize with ``python -m
+repro.obs.report``.  ``--metrics PATH`` dumps the explorer's metrics
+registry (memo hits/misses, dispatch counts, bucket histograms) as
+JSON.  Both are off by default and never change computed results.
 """
 
 from __future__ import annotations
@@ -88,6 +95,42 @@ def _add_common(sp: argparse.ArgumentParser) -> None:
     sp.add_argument("--out", default=None, help="write records jsonl here")
     sp.add_argument("--dump-config", default=None,
                     help="write the resolved ExploreConfig JSON here")
+    # also accepted after the subcommand; SUPPRESS keeps a value given
+    # before the subcommand from being clobbered by a subparser default
+    sp.add_argument("--trace", nargs="?", const="out.trace.json",
+                    default=argparse.SUPPRESS, metavar="PATH",
+                    help="write a Chrome trace of this run "
+                         "(default PATH: out.trace.json)")
+    sp.add_argument("--metrics", default=argparse.SUPPRESS, metavar="PATH",
+                    help="write the metrics registry as JSON")
+
+
+def _obs_begin(trace, metrics_path, ex):
+    """Enable tracing/telemetry/compile-profiling for one CLI run."""
+    if not (trace or metrics_path):
+        return None
+    from .. import obs
+    obs.enable_tracing()
+    obs.enable_telemetry()
+    obs.jaxprof.enable(registry=ex.metrics)
+    return (trace, metrics_path)
+
+
+def _obs_end(handle, ex):
+    if handle is None:
+        return
+    trace, metrics_path = handle
+    from .. import obs
+    tracer = obs.disable_tracing()
+    obs.enable_telemetry(False)
+    obs.jaxprof.disable()
+    if trace and tracer is not None:
+        tracer.write_chrome(trace)
+        print(f"trace -> {trace} "
+              f"({sum(1 for _ in tracer.iter_spans())} spans)")
+    if metrics_path:
+        ex.metrics.write_json(metrics_path)
+        print(f"metrics -> {metrics_path}")
 
 
 def _run(args, mode: str) -> int:
@@ -97,7 +140,13 @@ def _run(args, mode: str) -> int:
         with open(args.dump_config, "w") as f:
             json.dump(cfg.to_dict(), f, indent=2)
         print(f"config -> {args.dump_config}")
-    res = Explorer(apps, cfg).run()
+    ex = Explorer(apps, cfg)
+    obs_handle = _obs_begin(getattr(args, "trace", None),
+                            getattr(args, "metrics", None), ex)
+    try:
+        res = ex.run()
+    finally:
+        _obs_end(obs_handle, ex)
     print(res.table())
     rows = res.records()
     if args.out:
@@ -108,14 +157,21 @@ def _run(args, mode: str) -> int:
     return 0
 
 
-def smoke() -> int:
+#: every stage the smoke config executes must appear as a span in its trace
+_SMOKE_STAGES = ("mine", "rank", "merge", "map", "pnr", "schedule",
+                 "simulate")
+
+
+def smoke(trace=None, metrics_path=None) -> int:
     """Fast end-to-end self check (used by the tier-1 CI job).
 
     Runs the full staged pipeline — including batched PnR and the cycle-
     accurate golden check — on the paper's Fig. 3 convolution example,
     then asserts the two load-bearing API properties: stage memoization
     (a downstream-only config change performs zero re-mines) and the
-    jsonl round trip.
+    jsonl round trip.  With ``trace`` set, the run is traced and the
+    exported Chrome JSON must parse and contain one span per executed
+    stage (:data:`_SMOKE_STAGES`).
     """
     from dataclasses import replace
     import tempfile
@@ -137,7 +193,19 @@ def smoke() -> int:
         fabric=FabricOptions(spec=FabricSpec(rows=4, cols=4),
                              chains=2, sweeps=4, simulate=True))
     ex = Explorer(apps, cfg)
-    res = ex.run()
+    obs_handle = _obs_begin(trace, metrics_path, ex)
+    try:
+        res = ex.run()
+    finally:
+        _obs_end(obs_handle, ex)
+    if trace:
+        with open(trace) as f:
+            events = json.load(f)["traceEvents"]
+        names = {e["name"] for e in events if e.get("ph") == "X"}
+        missing = [s for s in _SMOKE_STAGES if s not in names]
+        assert not missing, f"trace missing stage spans: {missing}"
+        print(f"# trace OK: {len(events)} events cover all "
+              f"{len(_SMOKE_STAGES)} stages")
     rows = res.records()
     assert rows, "no records produced"
     assert all(r.sim_verified == 1 for r in rows), "golden check failed"
@@ -176,12 +244,19 @@ def main(argv=None) -> int:
                                  description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="fast end-to-end self check")
+    ap.add_argument("--trace", nargs="?", const="out.trace.json",
+                    default=None, metavar="PATH",
+                    help="record a pipeline trace and write Chrome "
+                         "trace-event JSON (default PATH: out.trace.json); "
+                         "open in Perfetto or `python -m repro.obs.report`")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="write the run's metrics registry as JSON")
     sub = ap.add_subparsers(dest="cmd")
     for cmd in ("per-app", "domain"):
         _add_common(sub.add_parser(cmd))
     args = ap.parse_args(argv)
     if args.smoke:
-        return smoke()
+        return smoke(args.trace, args.metrics)
     if args.cmd is None:
         ap.print_help()
         return 2

@@ -53,6 +53,8 @@ from ..core.merge import add_pattern, baseline_datapath, is_pe_pattern
 from ..core.mining import MinedSubgraph, mine_frequent_subgraphs
 from ..core.mis import rank_by_mis
 from ..graphir.graph import Graph
+from ..obs import event as obs_event, span
+from ..obs.metrics import CounterView, MetricsRegistry
 from .config import ExploreConfig
 from .records import ExploreRecord
 
@@ -151,14 +153,20 @@ def pnr_grouped(items: List[Tuple[str, Any, Mapping, Graph, int]],
     for i, (_, _, prob) in enumerate(lowered):
         groups[batch_signature(prob, options.sweeps)].append(i)
 
+    registry = getattr(stats, "registry", None)
     annealed: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
-    for idxs in groups.values():
-        out = anneal_jax_batch([lowered[i][2] for i in idxs],
-                               chains=options.chains, seed=options.seed,
-                               sweeps=options.sweeps,
-                               score_mode=options.score_mode,
-                               nonces=[items[i][4] for i in idxs])
+    for sig, idxs in groups.items():
+        with span("pnr.dispatch", bucket="x".join(map(str, sig)),
+                  pairs=len(idxs)):
+            out = anneal_jax_batch([lowered[i][2] for i in idxs],
+                                   chains=options.chains, seed=options.seed,
+                                   sweeps=options.sweeps,
+                                   score_mode=options.score_mode,
+                                   nonces=[items[i][4] for i in idxs],
+                                   metrics=registry)
         annealed.update(zip(idxs, out))
+        if registry is not None:
+            registry.observe("pnr.bucket_size", len(idxs))
         if stats is not None:
             stats["pnr_dispatch"] += 1
 
@@ -171,13 +179,14 @@ def pnr_grouped(items: List[Tuple[str, Any, Mapping, Graph, int]],
         for idx, name in enumerate(prob.cell_names):
             x, y = prob.slot_xy[slots[best][prob.entity_of(idx)]]
             coords[name] = (int(x), int(y))
-        placement = Placement(coords=coords, cost=float(costs[best]),
-                              backend="jax", chains=options.chains,
-                              sweeps=options.sweeps,
-                              chain_costs=[float(c) for c in costs])
-        routes = route_nets(netlist, placement, spec)
-        fc = evaluate_fabric(dp, mapping, netlist, placement, routes, spec,
-                             pe_name=pe_name)
+        with span("pnr.pair", pe=pe_name, app=mapping.app_name):
+            placement = Placement(coords=coords, cost=float(costs[best]),
+                                  backend="jax", chains=options.chains,
+                                  sweeps=options.sweeps,
+                                  chain_costs=[float(c) for c in costs])
+            routes = route_nets(netlist, placement, spec)
+            fc = evaluate_fabric(dp, mapping, netlist, placement, routes,
+                                 spec, pe_name=pe_name)
         results.append(PnRResult(spec, netlist, placement, routes, fc))
     return results
 
@@ -266,6 +275,7 @@ class ExploreResult:
     results: Dict[str, DSEResult]    # per app, or {domain_name: result}
     elapsed_s: float
     sim_buckets: Dict[Pair, str] = None   # provenance per simulated pair
+    metrics: Dict[str, Any] = None        # registry snapshot at run end
 
     def records(self) -> List[ExploreRecord]:
         buckets = self.sim_buckets or {}
@@ -313,44 +323,63 @@ class Explorer:
 
     def __init__(self, apps: Dict[str, Graph], config: ExploreConfig, *,
                  store: Optional[Dict] = None,
-                 stats: Optional[Counter] = None) -> None:
+                 stats: Optional[Counter] = None,
+                 metrics: Optional[MetricsRegistry] = None) -> None:
         self.apps = dict(apps)
         self.config = config
         self._store: Dict[Tuple, Any] = {} if store is None else store
-        self.stats: Counter = Counter() if stats is None else stats
+        # stats is a Counter-compatible view onto the metrics registry —
+        # the legacy `ex.stats["pnr_dispatch"]` reads and `stats[k] += 1`
+        # write-throughs all land in (and report from) the registry
+        if metrics is None and isinstance(stats, CounterView):
+            metrics = stats.registry
+        self.metrics: MetricsRegistry = metrics or MetricsRegistry()
+        self.stats: CounterView = self.metrics.view()
+        if stats is not None and not isinstance(stats, CounterView):
+            for k, v in stats.items():       # seed from a legacy Counter
+                self.stats[k] += v
         self._app_keys = {name: graph_key(g) for name, g in apps.items()}
 
     def with_config(self, **changes: Any) -> "Explorer":
         """New Explorer over a changed config, sharing the memo store."""
         return Explorer(self.apps, self.config.replace(**changes),
-                        store=self._store, stats=self.stats)
+                        store=self._store, metrics=self.metrics)
 
-    def _memo(self, key: Tuple, stage: str, thunk: Callable[[], Any]) -> Any:
+    def _memo(self, key: Tuple, stage: str, thunk: Callable[[], Any],
+              **attrs: Any) -> Any:
         if key not in self._store:
-            self._store[key] = thunk()
+            self.metrics.inc(f"memo.miss.{stage}")
+            with span(f"{stage}.work", **attrs):
+                self._store[key] = thunk()
             self.stats[stage] += 1
+        else:
+            self.metrics.inc(f"memo.hit.{stage}")
         return self._store[key]
 
     # -- stages ------------------------------------------------------------
     def mine(self) -> Dict[str, List[MinedSubgraph]]:
         cfg = self.config
         out = {}
-        for name, app in self.apps.items():
-            key = ("mine", self._app_keys[name], _mining_fields(cfg))
-            out[name] = self._memo(
-                key, "mine", lambda a=app: mine_frequent_subgraphs(a,
-                                                                   cfg.mining))
+        with span("mine"):
+            for name, app in self.apps.items():
+                key = ("mine", self._app_keys[name], _mining_fields(cfg))
+                out[name] = self._memo(
+                    key, "mine",
+                    lambda a=app: mine_frequent_subgraphs(a, cfg.mining),
+                    app=name)
         return out
 
     def rank(self) -> Dict[str, List[MinedSubgraph]]:
         mined = self.mine()
         out = {}
-        for name in self.apps:
-            key = ("rank", self._app_keys[name],
-                   _mining_fields(self.config))
-            out[name] = self._memo(
-                key, "rank", lambda n=name: rank_by_mis(
-                    [m for m in mined[n] if is_pe_pattern(m.pattern)]))
+        with span("rank"):
+            for name in self.apps:
+                key = ("rank", self._app_keys[name],
+                       _mining_fields(self.config))
+                out[name] = self._memo(
+                    key, "rank", lambda n=name: rank_by_mis(
+                        [m for m in mined[n] if is_pe_pattern(m.pattern)]),
+                    app=name)
         return out
 
     def _merge_key(self, name: Optional[str] = None) -> Tuple:
@@ -370,16 +399,20 @@ class Explorer:
         """
         ranked = self.rank()
         cfg = self.config
-        if cfg.mode == "per_app":
-            return {name: self._memo(
-                        self._merge_key(name), "merge",
-                        lambda n=name: build_variants(
-                            n, self.apps[n], ranked[n],
-                            max_merge=cfg.max_merge, rank_mode=cfg.rank_mode,
-                            validate=cfg.validate))
-                    for name in self.apps}
-        variant = self._memo(self._merge_key(), "merge",
-                             lambda: self._build_domain_variant(ranked))
+        with span("merge"):
+            if cfg.mode == "per_app":
+                return {name: self._memo(
+                            self._merge_key(name), "merge",
+                            lambda n=name: build_variants(
+                                n, self.apps[n], ranked[n],
+                                max_merge=cfg.max_merge,
+                                rank_mode=cfg.rank_mode,
+                                validate=cfg.validate),
+                            app=name)
+                        for name in self.apps}
+            variant = self._memo(self._merge_key(), "merge",
+                                 lambda: self._build_domain_variant(ranked),
+                                 domain=cfg.domain_name)
         return {cfg.domain_name: [variant]}
 
     def _build_domain_variant(self, ranked) -> PEVariant:
@@ -428,17 +461,20 @@ class Explorer:
 
     def map(self) -> Dict[Pair, Mapping]:
         out = {}
-        for v, app_name, key in self._pairs():
-            out[(v.name, app_name)] = self._memo(
-                key, "map", lambda v=v, a=app_name: map_application(
-                    v.datapath, self.apps[a], a))
+        with span("map"):
+            for v, app_name, key in self._pairs():
+                out[(v.name, app_name)] = self._memo(
+                    key, "map", lambda v=v, a=app_name: map_application(
+                        v.datapath, self.apps[a], a),
+                    pe=v.name, app=app_name)
         return out
 
     def _cost(self, v: PEVariant, app_name: str, map_key: Tuple) -> AppCost:
         mapping = self._store[map_key]
         return self._memo(("cost",) + map_key[1:], "cost",
                           lambda: evaluate_mapping(v.datapath, mapping,
-                                                   v.name))
+                                                   v.name),
+                          pe=v.name, app=app_name)
 
     def pnr(self) -> Dict[Pair, "PnRResult"]:
         """Array-level place-and-route for every pair — batch-first.
@@ -462,24 +498,29 @@ class Explorer:
             keys[(v.name, app_name)] = key
             if key not in self._store:
                 misses.append((v, app_name, key))
+                self.metrics.inc("memo.miss.pnr")
+            else:
+                self.metrics.inc("memo.hit.pnr")
 
         grouped = (cfg.pnr_batch == "grouped" and options.backend == "jax"
                    and options.hpwl_backend == "jnp")
-        if misses and grouped:
-            items = [(v.name, v.datapath, mappings[(v.name, a)],
-                      self.apps[a], zlib.crc32(repr(key).encode()))
-                     for v, a, key in misses]
-            pnrs = pnr_grouped(items, options, self.stats)
-            for (v, a, key), pnr in zip(misses, pnrs):
-                self._store[key] = pnr
-                self.stats["pnr"] += 1
-        elif misses:
-            for v, a, key in misses:
-                self._store[key] = _pnr_pair(v.name, v.datapath,
-                                             mappings[(v.name, a)],
-                                             self.apps[a], options)
-                self.stats["pnr"] += 1
-                self.stats["pnr_dispatch"] += 1
+        with span("pnr", pairs=len(keys), misses=len(misses)):
+            if misses and grouped:
+                items = [(v.name, v.datapath, mappings[(v.name, a)],
+                          self.apps[a], zlib.crc32(repr(key).encode()))
+                         for v, a, key in misses]
+                pnrs = pnr_grouped(items, options, self.stats)
+                for (v, a, key), pnr in zip(misses, pnrs):
+                    self._store[key] = pnr
+                    self.stats["pnr"] += 1
+            elif misses:
+                for v, a, key in misses:
+                    with span("pnr.pair", pe=v.name, app=a):
+                        self._store[key] = _pnr_pair(v.name, v.datapath,
+                                                     mappings[(v.name, a)],
+                                                     self.apps[a], options)
+                    self.stats["pnr"] += 1
+                    self.stats["pnr_dispatch"] += 1
         return {pair: self._store[key] for pair, key in keys.items()}
 
     def schedule(self) -> Dict[Pair, Any]:
@@ -506,20 +547,26 @@ class Explorer:
             keys[(v.name, app_name)] = key
             if key not in self._store:
                 misses.append((v, app_name, key))
+                self.metrics.inc("memo.miss.sched")
+            else:
+                self.metrics.inc("memo.hit.sched")
 
-        if misses and cfg.sim_batch == "grouped":
-            items = [(v.datapath, mappings[(v.name, a)], self.apps[a],
-                      pnrs[(v.name, a)]) for v, a, key in misses]
-            progs = build_sim_batch(items, stats=self.stats)
-            for (v, a, key), prog in zip(misses, progs):
-                self._store[key] = prog
-                self.stats["sched"] += 1
-        elif misses:
-            for v, a, key in misses:
-                self._store[key] = build_sim(
-                    v.datapath, mappings[(v.name, a)], self.apps[a],
-                    pnr=pnrs[(v.name, a)])[0]
-                self.stats["sched"] += 1
+        with span("schedule", pairs=len(keys), misses=len(misses)):
+            if misses and cfg.sim_batch == "grouped":
+                items = [(v.datapath, mappings[(v.name, a)], self.apps[a],
+                          pnrs[(v.name, a)]) for v, a, key in misses]
+                progs = build_sim_batch(items, stats=self.stats)
+                for (v, a, key), prog in zip(misses, progs):
+                    self._store[key] = prog
+                    self.stats["sched"] += 1
+                    obs_event("schedule.pair", pe=v.name, app=a, ii=prog.ii)
+            elif misses:
+                for v, a, key in misses:
+                    with span("schedule.pair", pe=v.name, app=a):
+                        self._store[key] = build_sim(
+                            v.datapath, mappings[(v.name, a)], self.apps[a],
+                            pnr=pnrs[(v.name, a)])[0]
+                    self.stats["sched"] += 1
         return {pair: self._store[key] for pair, key in keys.items()}
 
     def simulate(self) -> Dict[Pair, int]:
@@ -550,39 +597,49 @@ class Explorer:
             keys[pair] = key
             if key not in self._store:
                 misses.append((v, app_name, key))
+                self.metrics.inc("memo.miss.sim")
+            else:
+                self.metrics.inc("memo.hit.sim")
 
         grouped = (cfg.sim_batch == "grouped"
                    and options.sim_backend == "jax" and options.sim_verify)
-        if misses and grouped:
-            from ..sim import (compare_with_interp, random_inputs,
-                               sim_signature, simulate_batch)
-            by_bucket: Dict[Tuple, List[int]] = defaultdict(list)
-            inputs = []
-            for i, (v, a, key) in enumerate(misses):
-                prog = progs[(v.name, a)]
-                inputs.append(random_inputs(
-                    prog, options.sim_iterations, options.sim_batch,
-                    seed=options.input_seed(_pair_nonce(v.name, a))))
-                by_bucket[sim_signature(prog, options.sim_iterations,
-                                        options.sim_batch)].append(i)
-            for idxs in by_bucket.values():
-                results = simulate_batch(
-                    [progs[(misses[i][0].name, misses[i][1])]
-                     for i in idxs], [inputs[i] for i in idxs])
-                self.stats["sim_dispatch"] += 1
-                for i, res in zip(idxs, results):
-                    v, a, key = misses[i]
-                    err, exact = compare_with_interp(
-                        progs[(v.name, a)], self.apps[a], inputs[i], res)
-                    self._store[key] = _require_exact(err, exact,
-                                                      f"{a} on {v.name}")
+        with span("simulate", pairs=len(keys), misses=len(misses)):
+            if misses and grouped:
+                from ..sim import (compare_with_interp, random_inputs,
+                                   sim_signature, simulate_batch)
+                by_bucket: Dict[Tuple, List[int]] = defaultdict(list)
+                inputs = []
+                for i, (v, a, key) in enumerate(misses):
+                    prog = progs[(v.name, a)]
+                    inputs.append(random_inputs(
+                        prog, options.sim_iterations, options.sim_batch,
+                        seed=options.input_seed(_pair_nonce(v.name, a))))
+                    by_bucket[sim_signature(prog, options.sim_iterations,
+                                            options.sim_batch)].append(i)
+                for bucket, idxs in by_bucket.items():
+                    results = simulate_batch(
+                        [progs[(misses[i][0].name, misses[i][1])]
+                         for i in idxs], [inputs[i] for i in idxs],
+                        metrics=self.metrics)
+                    self.stats["sim_dispatch"] += 1
+                    self.metrics.observe("sim.bucket_size", len(idxs))
+                    for i, res in zip(idxs, results):
+                        v, a, key = misses[i]
+                        with span("simulate.pair", pe=v.name, app=a):
+                            err, exact = compare_with_interp(
+                                progs[(v.name, a)], self.apps[a],
+                                inputs[i], res)
+                            self._store[key] = _require_exact(
+                                err, exact, f"{a} on {v.name}")
+                        self.stats["sim"] += 1
+            elif misses:
+                for v, a, key in misses:
+                    with span("simulate.pair", pe=v.name, app=a):
+                        self._store[key] = _verify_prog(
+                            progs[(v.name, a)], self.apps[a],
+                            f"{a} on {v.name}", options,
+                            _pair_nonce(v.name, a))
                     self.stats["sim"] += 1
-        elif misses:
-            for v, a, key in misses:
-                self._store[key] = _verify_prog(
-                    progs[(v.name, a)], self.apps[a], f"{a} on {v.name}",
-                    options, _pair_nonce(v.name, a))
-                self.stats["sim"] += 1
         return {pair: self._store[key] for pair, key in keys.items()}
 
     def sim_buckets(self, progs: Dict[Pair, Any]) -> Dict[Pair, str]:
@@ -610,12 +667,13 @@ class Explorer:
     def run(self) -> ExploreResult:
         cfg = self.config
         t0 = time.monotonic()
-        ranked = self.rank()
-        variants = self.merge()
-        self.map()
-        pnrs = self.pnr() if cfg.fabric is not None else {}
-        progs = self.schedule() if cfg.simulate else {}
-        verified = self.simulate() if cfg.simulate else {}
+        with span("explore.run", mode=cfg.mode):
+            ranked = self.rank()
+            variants = self.merge()
+            self.map()
+            pnrs = self.pnr() if cfg.fabric is not None else {}
+            progs = self.schedule() if cfg.simulate else {}
+            verified = self.simulate() if cfg.simulate else {}
         elapsed = time.monotonic() - t0
 
         def fresh(v: PEVariant, app_names) -> PEVariant:
@@ -652,4 +710,5 @@ class Explorer:
                  variants[cfg.domain_name]], elapsed)
         return ExploreResult(cfg, _digest(cfg.to_dict()), dict(self.apps),
                              results, elapsed,
-                             self.sim_buckets(progs) if progs else {})
+                             self.sim_buckets(progs) if progs else {},
+                             self.metrics.to_dict())

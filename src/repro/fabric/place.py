@@ -385,10 +385,14 @@ def batch_signature(p: PlacementProblem, sweeps: int) -> Tuple[int, ...]:
             _bucket(p.ent_nets.shape[1]))
 
 
+#: cost-curve snapshot points captured per chain when telemetry is on
+CURVE_POINTS = 16
+
+
 @functools.lru_cache(maxsize=64)
 def _build_batch_annealer(s_pad: int, n_pad: int, d_pad: int, e_pad: int,
                           k_pad: int, t1: float, hpwl_backend: str,
-                          score_mode: str):
+                          score_mode: str, telemetry: bool = False):
     """One compiled chain program for every problem of one bucket signature.
 
     Unlike :func:`_build_annealer` (which bakes the cell/slot counts into
@@ -398,6 +402,12 @@ def _build_batch_annealer(s_pad: int, n_pad: int, d_pad: int, e_pad: int,
     scaling uniforms with the dynamic counts, the temperature schedule uses
     the dynamic per-problem step count, and steps beyond a problem's real
     budget are masked to rejects.
+
+    With ``telemetry`` the chain additionally returns its accepted-move
+    count and :data:`CURVE_POINTS` current-cost snapshots.  The telemetry
+    state only *observes* the accept decision and running cost — the move
+    schedule and cost arithmetic are untouched — so placements and costs
+    are bit-identical to the untelemetered program.
     """
     import jax
     import jax.numpy as jnp
@@ -436,6 +446,15 @@ def _build_batch_annealer(s_pad: int, n_pad: int, d_pad: int, e_pad: int,
         temps = t0 * (t1 / t0) ** frac
         active = jnp.arange(s_pad) < n_steps
 
+        def tele0():
+            return (jnp.int32(0), jnp.zeros((CURVE_POINTS,), jnp.float32))
+
+        def tele_track(i, accept, cur, tele):
+            n_acc, curve = tele
+            n_acc = n_acc + accept.astype(jnp.int32)
+            idx = jnp.minimum((i * CURVE_POINTS) // s_pad, CURVE_POINTS - 1)
+            return n_acc, curve.at[idx].set(cur)
+
         def accept_and_track(accept, cand, new, state_rest):
             slot_of, cur, best_slot, best = state_rest
             slot_of = jnp.where(accept, cand, slot_of)
@@ -447,25 +466,32 @@ def _build_batch_annealer(s_pad: int, n_pad: int, d_pad: int, e_pad: int,
 
         if score_mode == "full":
             def step(i, state):
-                slot_of, cur, best_slot, best = state
+                slot_of, cur, best_slot, best = state[:4]
                 ai, ti = a[i], t[i]
                 b = jnp.argmax(slot_of == ti)
                 cand = slot_of.at[ai].set(slot_of[b]).at[b].set(slot_of[ai])
                 new = hpwl(slot_xy[cand], net_pins, net_mask)
                 accept = ((new <= cur)
                           | (log_u[i] * temps[i] < cur - new)) & active[i]
-                return accept_and_track(accept, cand, new, state)
+                out = accept_and_track(accept, cand, new, state[:4])
+                if telemetry:
+                    return out + tele_track(i, accept, out[1], state[4:])
+                return out
 
             c0 = hpwl(slot_xy[slot_of0], net_pins, net_mask)
-            _, _, best_slot, best = jax.lax.fori_loop(
-                0, s_pad, step, (slot_of0, c0, slot_of0, c0))
-            return best_slot, best
+            state0 = (slot_of0, c0, slot_of0, c0)
+            if telemetry:
+                state0 = state0 + tele0()
+            out = jax.lax.fori_loop(0, s_pad, step, state0)
+            if telemetry:
+                return out[2], out[3], out[4], out[5]
+            return out[2], out[3]
 
         k2_ = k_pad * 2
         dup_tri = jnp.tril(jnp.ones((k2_, k2_), bool), k=-1)
 
         def step(i, state):
-            slot_of, pnc, cur, best_slot, best = state
+            slot_of, pnc, cur, best_slot, best = state[:5]
             ai, ti = a[i], t[i]
             b = jnp.argmax(slot_of == ti)
             cand = slot_of.at[ai].set(slot_of[b]).at[b].set(slot_of[ai])
@@ -481,13 +507,20 @@ def _build_batch_annealer(s_pad: int, n_pad: int, d_pad: int, e_pad: int,
                             pnc.at[tn].set(new_vals, mode="drop"), pnc)
             slot_of, cur, best_slot, best = accept_and_track(
                 accept, cand, new, (slot_of, cur, best_slot, best))
+            if telemetry:
+                tele = tele_track(i, accept, cur, state[5:])
+                return (slot_of, pnc, cur, best_slot, best) + tele
             return slot_of, pnc, cur, best_slot, best
 
         pnc0 = net_hpwl(slot_xy[slot_of0], net_pins, net_mask)
         c0 = jnp.sum(pnc0)
-        _, _, _, best_slot, best = jax.lax.fori_loop(
-            0, s_pad, step, (slot_of0, pnc0, c0, slot_of0, c0))
-        return best_slot, best
+        state0 = (slot_of0, pnc0, c0, slot_of0, c0)
+        if telemetry:
+            state0 = state0 + tele0()
+        out = jax.lax.fori_loop(0, s_pad, step, state0)
+        if telemetry:
+            return out[3], out[4], out[5], out[6]
+        return out[3], out[4]
 
     # one flat vmap over problems x chains, each row carrying its own
     # problem data: a nested vmap (outer problems, inner chains with the
@@ -501,7 +534,9 @@ def anneal_jax_batch(problems: List[PlacementProblem], *, chains: int = 16,
                      seed: int = 0, sweeps: int = 32,
                      t0: Optional[float] = None, t1: float = 0.02,
                      score_mode: str = "delta",
-                     nonces: Optional[List[int]] = None
+                     nonces: Optional[List[int]] = None,
+                     telemetry: Optional[bool] = None,
+                     metrics=None
                      ) -> List[Tuple[np.ndarray, np.ndarray]]:
     """Anneal many placement problems in one JAX dispatch.
 
@@ -519,8 +554,21 @@ def anneal_jax_batch(problems: List[PlacementProblem], *, chains: int = 16,
     contract) pass a content-derived nonce per problem; with bucket-shape
     padding the result then depends only on the problem itself, never on
     its groupmates.
+
+    ``telemetry`` (default: :func:`repro.obs.telemetry_enabled`) selects a
+    compiled variant that also reports per-chain accept counts and
+    cost-curve snapshots; placements stay bit-identical.  Acceptance rates
+    land in ``metrics`` (histogram ``pnr.anneal.accept_rate``, cost curves
+    as ``pnr.anneal.cost_curve.<nonce>`` gauges), defaulting to the global
+    registry.
     """
     import jax
+
+    from ..obs import telemetry_enabled
+    from ..obs.metrics import global_registry
+
+    if telemetry is None:
+        telemetry = telemetry_enabled()
 
     if nonces is None:
         nonces = list(range(len(problems)))
@@ -561,7 +609,8 @@ def anneal_jax_batch(problems: List[PlacementProblem], *, chains: int = 16,
             jax.random.fold_in(base_key, nonces[i] & 0x7FFFFFFF), chains))
 
     run = _build_batch_annealer(s_pad, n_pad, d_pad, e_pad, k_pad,
-                                float(t1), "jnp", score_mode)
+                                float(t1), "jnp", score_mode,
+                                bool(telemetry))
 
     def flat(x):                     # (P, C, ...) -> (P*C, ...)
         return x.reshape((n_p * chains,) + x.shape[2:])
@@ -569,11 +618,23 @@ def anneal_jax_batch(problems: List[PlacementProblem], *, chains: int = 16,
     def tile(x):                     # (P, ...) -> (P*C, ...) per-chain copy
         return np.repeat(x, chains, axis=0)
 
-    slots, costs = run(flat(keys), flat(init), tile(slot_xy),
-                       tile(net_pins), tile(net_mask), tile(ent_nets),
-                       tile(dims), tile(t0s))
-    slots = np.asarray(slots).reshape(n_p, chains, e_pad)
-    costs = np.asarray(costs).reshape(n_p, chains)
+    out = run(flat(keys), flat(init), tile(slot_xy),
+              tile(net_pins), tile(net_mask), tile(ent_nets),
+              tile(dims), tile(t0s))
+    slots = np.asarray(out[0]).reshape(n_p, chains, e_pad)
+    costs = np.asarray(out[1]).reshape(n_p, chains)
+    if telemetry:
+        reg = metrics if metrics is not None else global_registry()
+        accepts = np.asarray(out[2]).reshape(n_p, chains)
+        curves = np.asarray(out[3]).reshape(n_p, chains, CURVE_POINTS)
+        for i, p in enumerate(problems):
+            steps_i = max(1, sweeps * (p.n_pe_cells + p.n_io_cells))
+            reg.observe("pnr.anneal.accept_rate",
+                        float(accepts[i].mean()) / steps_i)
+            best_chain = int(np.argmin(costs[i]))
+            reg.set_gauge(f"pnr.anneal.cost_curve.{nonces[i] & 0x7FFFFFFF}",
+                          [round(float(c), 3) for c in
+                           curves[i, best_chain]])
     return [(slots[i, :, :p.n_entities], costs[i])
             for i, p in enumerate(problems)]
 

@@ -630,7 +630,8 @@ def _build_batch_stepper(sig: Tuple[int, ...], ops: Tuple[str, ...]):
 
 
 def simulate_batch(progs: List[SimProgram], inputs_list,
-                   *, backend: str = "jax") -> List[SimResult]:
+                   *, backend: str = "jax",
+                   metrics=None) -> List[SimResult]:
     """Simulate many programs in ONE vmapped ``lax.scan`` dispatch.
 
     All programs must share one :func:`sim_signature` (group by it first)
@@ -641,10 +642,17 @@ def simulate_batch(progs: List[SimProgram], inputs_list,
     zeros — so per-program outputs are bit-identical to :func:`simulate`
     on that program alone, regardless of which programs share the
     dispatch.
+
+    Bucket provenance lands in ``metrics`` (default: the global registry):
+    one ``sim.dispatch`` tick plus ``sim.bucket_programs`` /
+    ``sim.bucket_cycles`` histogram observations per call, and the
+    dispatch runs under a ``sim.dispatch`` span naming the bucket.
     """
     import jax.numpy as jnp
 
     from ..kernels.sim_step import op_table
+    from ..obs import span
+    from ..obs.metrics import global_registry
 
     if backend != "jax":
         raise ValueError("simulate_batch supports backend='jax' only "
@@ -663,6 +671,11 @@ def simulate_batch(progs: List[SimProgram], inputs_list,
                          "group by sim_signature() first")
     sig = next(iter(sigs))
 
+    reg = metrics if metrics is not None else global_registry()
+    reg.inc("sim.dispatch")
+    reg.observe("sim.bucket_programs", len(progs))
+    reg.observe("sim.bucket_cycles", sig[8])
+
     ops = op_table(sorted(set().union(*(p.ops for p in progs)) - {"nop"}))
     code_of = {name: k for k, name in enumerate(ops)}
     padded = [_pad_program(p, sig, code_of) for p in progs]
@@ -672,8 +685,10 @@ def simulate_batch(progs: List[SimProgram], inputs_list,
     for i, (p, a) in enumerate(zip(progs, arrs)):
         inputs[i, :, :, :p.n_ext] = a
 
-    run = _build_batch_stepper(sig, ops)
-    outbuf = np.asarray(run(*stacked, jnp.asarray(inputs)))
+    with span("sim.dispatch", bucket="x".join(str(d) for d in sig),
+              programs=len(progs)):
+        run = _build_batch_stepper(sig, ops)
+        outbuf = np.asarray(run(*stacked, jnp.asarray(inputs)))
 
     results = []
     for i, p in enumerate(progs):

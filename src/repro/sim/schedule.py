@@ -46,6 +46,8 @@ from ..fabric.arch import Coord, FabricSpec
 from ..fabric.netlist import Netlist
 from ..fabric.place import Placement
 from ..fabric.route import RoutedNet, RouteResult
+from ..obs import span
+from ..obs.metrics import global_registry
 
 #: output-register and input-latch latencies (cycles)
 L_OUT = 1
@@ -281,10 +283,13 @@ def modulo_schedule(netlist: Netlist, placement: Placement,
     heights = _heights(p)
     depth = spec.latch_depth
 
+    stats = global_registry().view()
     attempts = 0
     for ii in range(mii, max_ii + 1):
         attempts += 1
-        start = _try_schedule(p, ii, heights, budget_factor, depth)
+        stats["sched_attempts"] += 1
+        start = _try_schedule(p, ii, heights, budget_factor, depth,
+                              stats=stats)
         if start is not None:
             return _finish(p, timing, ii, rec_mii, res_mii, start, attempts,
                            depth)
@@ -329,15 +334,20 @@ def modulo_schedule_batch(items: List[Tuple[Netlist, Placement, RouteResult,
     groups: Dict[Tuple, List[int]] = {}
     for i, (_, _, _, spec) in enumerate(items):
         groups.setdefault(fabric_signature(spec), []).append(i)
-    for idxs in groups.values():
-        if stats is not None:
-            stats["sched_group"] += 1
-        _schedule_group(items, idxs, out, max_ii, budget_factor)
+    if stats is None:
+        stats = global_registry().view()
+    for sig, idxs in groups.items():
+        stats["sched_group"] += 1
+        with span("schedule.group", fabric="x".join(map(str, sig)),
+                  pairs=len(idxs)):
+            _schedule_group(items, idxs, out, max_ii, budget_factor,
+                            stats=stats)
     return out
 
 
 def _schedule_group(items, idxs: List[int], out: List,
-                    max_ii: Optional[int], budget_factor: int) -> None:
+                    max_ii: Optional[int], budget_factor: int,
+                    stats=None) -> None:
     pairs: List[_PairSched] = []
     for i in idxs:
         netlist, placement, routes, spec = items[i]
@@ -355,6 +365,8 @@ def _schedule_group(items, idxs: List[int], out: List,
     def start(st: _PairSched) -> bool:
         """Open a new II attempt; True while the pair still wants scans."""
         st.attempts += 1
+        if stats is not None:
+            stats["sched_attempts"] += 1
         st.gen = _schedule_gen(st.p, st.ii, st.heights, budget_factor,
                                st.depth)
         return advance(st, None)
@@ -378,6 +390,11 @@ def _schedule_group(items, idxs: List[int], out: List,
     active = [st for st in pairs if start(st)]
     while active:
         answers = _feasible_scan_batch([st.req for st in active])
+        if stats is not None:
+            stats["sched_rounds"] += 1
+            stats["sched_scans"] += len(answers)
+            stats["sched_backtracks"] += sum(1 for a in answers
+                                             if a is None)
         active = [st for st, ans in zip(active, answers)
                   if advance(st, ans)]
 
@@ -562,7 +579,7 @@ def _schedule_gen(p: _Problem, ii: int, heights: Dict[OpKey, int],
 
 
 def _try_schedule(p: _Problem, ii: int, heights: Dict[OpKey, int],
-                  budget_factor: int, depth: int
+                  budget_factor: int, depth: int, *, stats=None
                   ) -> Optional[Dict[OpKey, int]]:
     """Drive one pair's scheduling coroutine solo."""
     gen = _schedule_gen(p, ii, heights, budget_factor, depth)
@@ -573,6 +590,11 @@ def _try_schedule(p: _Problem, ii: int, heights: Dict[OpKey, int],
         except StopIteration as stop:
             return stop.value
         ans = _feasible_scan(req)
+        if stats is not None:
+            stats["sched_rounds"] += 1
+            stats["sched_scans"] += 1
+            if ans is None:
+                stats["sched_backtracks"] += 1
 
 
 def _finish(p: _Problem, timing: Dict[str, NetTiming], ii: int,

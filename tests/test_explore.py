@@ -166,6 +166,16 @@ def test_grouped_pnr_matches_serial_structure_and_is_deterministic():
     ex = Explorer(apps, cfg)
     grouped = ex.pnr()
     assert ex.stats["pnr_dispatch"] >= 1
+    # the CI-claimed dispatch count is a metrics-registry read, not a
+    # separate hand-ticked counter: stats is a live view over ex.metrics,
+    # and the registry agrees with the distinct batch signatures placed
+    assert ex.stats.registry is ex.metrics
+    assert ex.metrics.counter("pnr_dispatch") == ex.stats["pnr_dispatch"]
+    from repro.fabric import batch_signature, lower
+    sigs = {batch_signature(lower(p.netlist, p.spec), cfg.fabric.sweeps)
+            for p in grouped.values()}
+    assert ex.metrics.counter("pnr_dispatch") == len(sigs)
+    assert ex.metrics.counter("memo.miss.pnr") == len(grouped)
     serial = ex.with_config(pnr_batch="serial").pnr()
     assert set(grouped) == set(serial)
     for pair in grouped:
@@ -226,6 +236,16 @@ def test_sim_stage_grouped_matches_serial():
     grouped = grouped_ex.run()
     assert grouped_ex.stats["sim_dispatch"] >= 1
     assert grouped_ex.stats["sched_group"] >= 1
+    # dispatch claims are registry reads: the sim stage's own counter and
+    # the cycle-level bucket provenance must agree, and the run's result
+    # carries the registry snapshot
+    assert grouped_ex.stats.registry is grouped_ex.metrics
+    assert grouped_ex.metrics.counter("sim.dispatch") \
+        == grouped_ex.metrics.counter("sim_dispatch")
+    assert grouped_ex.metrics.counter("sched_rounds") >= 1
+    snap = grouped.metrics["counters"]
+    assert snap["sim_dispatch"] == grouped_ex.stats["sim_dispatch"]
+    assert snap["pnr_dispatch"] == grouped_ex.stats["pnr_dispatch"]
     serial = Explorer(apps, cfg.replace(sim_batch="serial")).run()
 
     g_rows = grouped.records()
