@@ -3,9 +3,11 @@
 from __future__ import annotations
 
 import time
-from typing import Callable, Tuple
+from typing import Callable, Dict, List, Tuple
 
 from repro.core import MiningConfig
+from repro.obs.diff import summarize_repeats
+from repro.obs.manifest import capture as capture_manifest
 
 #: mining budget used by all paper-figure benchmarks (keeps the full suite
 #: under ~10 min on one CPU core; raise for deeper results)
@@ -30,6 +32,35 @@ def timeit(fn: Callable, *args, repeats: int = 3, **kw) -> Tuple[float, object]:
 
 def emit(name: str, us: float, derived: str) -> None:
     print(f"{name},{us:.1f},{derived}")
+
+
+def manifest_block() -> dict:
+    """The run-manifest dict every BENCH_*.json embeds (re-inspected per
+    call so the xla_cache cold/warm state is current, not import-time)."""
+    return capture_manifest(refresh=True).to_dict()
+
+
+def repeat_timed(fn: Callable[[], object],
+                 repeats: int) -> Tuple[List[float], object]:
+    """Run ``fn`` ``repeats`` times; (wall-second samples, last result)."""
+    samples: List[float] = []
+    out = None
+    for _ in range(max(1, repeats)):
+        t0 = time.perf_counter()
+        out = fn()
+        samples.append(time.perf_counter() - t0)
+    return samples, out
+
+
+def repeats_block(samples_by_key: Dict[str, List[float]],
+                  n: int) -> dict:
+    """The ``repeats`` block of a BENCH json: per timed metric, the
+    median/IQR summary of its samples — artifacts carry a distribution,
+    never a lone wall-clock (see ``repro.obs.diff.summarize_repeats``)."""
+    block = {"n": int(n)}
+    for key, samples in samples_by_key.items():
+        block[key] = summarize_repeats(samples)
+    return block
 
 
 def write_records_jsonl(result, out_path: str) -> list:

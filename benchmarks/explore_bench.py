@@ -16,12 +16,20 @@ bucket-compatible group of programs through ONE vmapped scan
 
 Both modes run from a shared upstream store (everything upstream of the
 stage under test is already done) and from cold compile caches (a fresh
-exploration's real cost).  Results land in ``results/BENCH_explore.json``
-/ ``results/BENCH_sim_batch.json`` (committed + CI artifact + gated by
-``results/check_bench.py``).
+exploration's real cost).  ``--repeats N`` (default 3 at full budget, 1
+in smoke) re-runs each timed stage N times — the memo store is purged
+between repeats via ``Explorer.forget`` — and the artifact records the
+**median** wall-clock plus a median/IQR ``repeats`` block, never a lone
+sample.  Every artifact also embeds a run ``manifest`` (git SHA,
+versions, device, XLA-cache state) and memory gauges (per-stage host
+peak + live device bytes, measured on a separate untimed telemetry
+pass).  Results land in ``results/BENCH_explore.json`` /
+``results/BENCH_sim_batch.json`` (committed + CI artifact + gated by
+``results/check_bench.py`` and tracked by ``python -m
+repro.obs.regress``).
 
 Run:  PYTHONPATH=src python -m benchmarks.explore_bench \
-          [--simulate] [--smoke] [--out P]
+          [--simulate] [--smoke] [--repeats N] [--out P]
 """
 
 from __future__ import annotations
@@ -29,6 +37,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import statistics
 import sys
 import time
 
@@ -36,7 +45,8 @@ from repro.apps import ml_graphs
 from repro.explore import ExploreConfig, Explorer
 from repro.fabric import FabricOptions, FabricSpec
 
-from .common import BENCH_MINING, FAST_MINING, emit
+from .common import (BENCH_MINING, FAST_MINING, emit, manifest_block,
+                     repeats_block)
 
 DEFAULT_OUT = os.path.join("results", "BENCH_explore.json")
 DEFAULT_SIM_OUT = os.path.join("results", "BENCH_sim_batch.json")
@@ -47,6 +57,14 @@ def _write(result: dict, out_path: str) -> None:
     with open(out_path, "w") as f:
         json.dump(result, f, indent=2)
         f.write("\n")
+
+
+def _default_repeats(smoke: bool, repeats) -> int:
+    """Nightly/full runs default to median-of-3; smoke stays single-shot
+    (its assertions are ratios, and CI minutes are budgeted)."""
+    if repeats is not None:
+        return max(1, int(repeats))
+    return 1 if smoke else 3
 
 
 def _counter_snapshot(registry) -> dict:
@@ -73,7 +91,37 @@ def _metrics_block(registry, before: dict, keys) -> dict:
     return block
 
 
-def run(out_path: str = DEFAULT_OUT, smoke: bool = False) -> dict:
+def _memory_gauges(registry, stages) -> dict:
+    """Max per-stage host-peak / device-byte gauges (set by the untimed
+    telemetry pass) in METRIC_KEYS shape."""
+    gauges = registry.to_dict()["gauges"]
+
+    def peak(prefix):
+        vals = [v for k, v in gauges.items()
+                if k.startswith(prefix) and k.split(".")[-1] in stages
+                and isinstance(v, (int, float))]
+        return int(max(vals)) if vals else 0
+
+    return {"host_peak_bytes": peak("mem.host_peak_bytes."),
+            "device_bytes": peak("mem.device_bytes.")}
+
+
+def _memory_pass(base, stages, run_fn) -> None:
+    """One untimed instrumented run: telemetry on (tracemalloc spans +
+    device-byte gauges), compile caches warm from the timed repeats, so
+    this measures footprint without polluting the wall-clock samples."""
+    from repro import obs
+    obs.enable_telemetry()
+    try:
+        base.forget(*stages)
+        run_fn()
+    finally:
+        obs.enable_telemetry(False)
+
+
+def run(out_path: str = DEFAULT_OUT, smoke: bool = False,
+        repeats=None) -> dict:
+    repeats = _default_repeats(smoke, repeats)
     apps = ml_graphs()
     fabric = FabricOptions(
         spec=FabricSpec(rows=16, cols=16), backend="jax",
@@ -89,15 +137,17 @@ def run(out_path: str = DEFAULT_OUT, smoke: bool = False) -> dict:
     jaxprof.enable(registry=base.metrics)
 
     def timed_pnr(pnr_batch: str):
-        # fresh annealer programs per mode (cold caches emulate a fresh
-        # exploration); the memo store is shared for the upstream stages
-        # but pnr keys include pnr_batch, so each mode places from scratch
+        # fresh annealer programs + a purged pnr memo per repeat (cold
+        # caches emulate a fresh exploration); the memo store is shared
+        # for the upstream stages but pnr keys include pnr_batch, so each
+        # mode places from scratch
         import importlib
         # repro.fabric re-exports the place() *function*, shadowing the
         # submodule attribute — resolve the module explicitly
         place_mod = importlib.import_module("repro.fabric.place")
         place_mod._build_annealer.cache_clear()
         place_mod._build_batch_annealer.cache_clear()
+        base.forget("pnr")
         ex = base.with_config(pnr_batch=pnr_batch)
         before = ex.stats["pnr_dispatch"]     # the stats Counter is shared
         t0 = time.perf_counter()
@@ -105,9 +155,23 @@ def run(out_path: str = DEFAULT_OUT, smoke: bool = False) -> dict:
         dt = time.perf_counter() - t0
         return dt, pnrs, ex.stats["pnr_dispatch"] - before
 
-    serial_s, serial_pnrs, serial_disp = timed_pnr("serial")
-    before = _counter_snapshot(base.metrics)
-    grouped_s, grouped_pnrs, grouped_disp = timed_pnr("grouped")
+    samples = {"serial_s": [], "grouped_s": []}
+    serial_pnrs = serial_disp = None
+    for _ in range(repeats):
+        dt, serial_pnrs, serial_disp = timed_pnr("serial")
+        samples["serial_s"].append(dt)
+    grouped_pnrs = grouped_disp = None
+    before = None
+    for _ in range(repeats):
+        before = _counter_snapshot(base.metrics)   # last repeat's deltas
+        dt, grouped_pnrs, grouped_disp = timed_pnr("grouped")
+        samples["grouped_s"].append(dt)
+    metrics = _metrics_block(base.metrics, before,
+                             ("pnr_dispatch", "memo_miss", "memo_hit",
+                              "compile_events"))
+    _memory_pass(base, ("pnr",),
+                 lambda: base.with_config(pnr_batch="grouped").pnr())
+    metrics.update(_memory_gauges(base.metrics, ("pnr",)))
     jaxprof.disable()
 
     pairs = len(serial_pnrs)
@@ -118,11 +182,14 @@ def run(out_path: str = DEFAULT_OUT, smoke: bool = False) -> dict:
         for pnr in pnrs.values():
             assert pnr.routes.success, "routing overflow in benchmark run"
 
+    serial_s = statistics.median(samples["serial_s"])
+    grouped_s = statistics.median(samples["grouped_s"])
     speedup = serial_s / max(grouped_s, 1e-9)
     result = {
         "bench": "explore_pnr_batch",
         "suite": "fig11_ml@16x16",
         "mode": "smoke" if smoke else "full",
+        "manifest": manifest_block(),
         "pairs": pairs,
         "chains": fabric.chains,
         "sweeps": fabric.sweeps,
@@ -131,14 +198,13 @@ def run(out_path: str = DEFAULT_OUT, smoke: bool = False) -> dict:
         "serial_s": round(serial_s, 3),
         "grouped_s": round(grouped_s, 3),
         "speedup": round(speedup, 2),
+        "repeats": repeats_block(samples, repeats),
         # registry deltas for the grouped run — check_bench.py asserts
         # pnr_dispatch agrees with grouped_dispatches above
-        "metrics": _metrics_block(base.metrics, before,
-                                  ("pnr_dispatch", "memo_miss", "memo_hit",
-                                   "compile_events")),
+        "metrics": metrics,
         "note": "pnr stage only, shared upstream artifacts, cold annealer "
-                "caches (includes jit compiles — the cost of a fresh "
-                "exploration)",
+                "caches per repeat (includes jit compiles — the cost of a "
+                "fresh exploration); wall-clocks are medians over repeats",
     }
     _write(result, out_path)
 
@@ -147,14 +213,15 @@ def run(out_path: str = DEFAULT_OUT, smoke: bool = False) -> dict:
     emit("explore_pnr_grouped", grouped_s * 1e6,
          f"pairs={pairs};dispatches={result['grouped_dispatches']}")
     emit("explore_pnr_speedup", grouped_s * 1e6,
-         f"{speedup:.2f}x (target >=3x);out={out_path}")
+         f"{speedup:.2f}x (target >=3x);repeats={repeats};out={out_path}")
     if smoke:
         assert speedup > 1.0, (
             f"batched pnr slower than serial ({speedup:.2f}x)")
     return result
 
 
-def run_sim(out_path: str = DEFAULT_SIM_OUT, smoke: bool = False) -> dict:
+def run_sim(out_path: str = DEFAULT_SIM_OUT, smoke: bool = False,
+            repeats=None) -> dict:
     """Schedule+simulate stages, serial vs grouped, from shared pnr."""
     import numpy as np
 
@@ -163,6 +230,7 @@ def run_sim(out_path: str = DEFAULT_SIM_OUT, smoke: bool = False) -> dict:
         simulate_batch
     from repro.sim import cycle as cycle_mod
 
+    repeats = _default_repeats(smoke, repeats)
     apps = ml_graphs()
     fabric = FabricOptions(
         spec=FabricSpec(rows=16, cols=16), backend="jax",
@@ -178,9 +246,11 @@ def run_sim(out_path: str = DEFAULT_SIM_OUT, smoke: bool = False) -> dict:
     jaxprof.enable(registry=base.metrics)
 
     def timed(sim_batch: str):
-        # cold compile caches emulate a fresh exploration; the sched/sim
-        # memo keys include sim_batch, so each mode works from scratch
+        # cold compile caches + purged sched/sim memo per repeat emulate
+        # a fresh exploration; the sched/sim memo keys include sim_batch,
+        # so each mode works from scratch
         cycle_mod._build_batch_stepper.cache_clear()
+        base.forget("sched", "sim")
         ex = base.with_config(sim_batch=sim_batch)
         d0 = {k: ex.stats[k] for k in ("sim_dispatch", "sched_group")}
         t0 = time.perf_counter()
@@ -189,13 +259,30 @@ def run_sim(out_path: str = DEFAULT_SIM_OUT, smoke: bool = False) -> dict:
         dt = time.perf_counter() - t0
         return dt, progs, flags, {k: ex.stats[k] - d0[k] for k in d0}
 
-    serial_s, serial_progs, serial_flags, _ = timed("serial")
-    before = _counter_snapshot(base.metrics)
-    grouped_s, grouped_progs, grouped_flags, disp = timed("grouped")
-    metrics_block = _metrics_block(
+    samples = {"serial_s": [], "grouped_s": []}
+    serial_progs = serial_flags = None
+    for _ in range(repeats):
+        dt, serial_progs, serial_flags, _d = timed("serial")
+        samples["serial_s"].append(dt)
+    grouped_progs = grouped_flags = disp = None
+    before = None
+    for _ in range(repeats):
+        before = _counter_snapshot(base.metrics)   # last repeat's deltas
+        dt, grouped_progs, grouped_flags, disp = timed("grouped")
+        samples["grouped_s"].append(dt)
+    metrics_blk = _metrics_block(
         base.metrics, before,
         ("sim_dispatch", "sched_group", "sched_rounds", "sched_backtracks",
          "memo_miss", "memo_hit", "compile_events"))
+
+    def sim_pass():
+        ex = base.with_config(sim_batch="grouped")
+        ex.schedule()
+        ex.simulate()
+
+    _memory_pass(base, ("sched", "sim"), sim_pass)
+    metrics_blk.update(_memory_gauges(base.metrics,
+                                      ("schedule", "simulate")))
     jaxprof.disable()
 
     pairs = sorted(serial_progs)
@@ -227,11 +314,14 @@ def run_sim(out_path: str = DEFAULT_SIM_OUT, smoke: bool = False) -> dict:
             ref = simulate(serial_progs[p], inputs[p])
             bit_identical &= bool(np.array_equal(res.outputs, ref.outputs))
 
+    serial_s = statistics.median(samples["serial_s"])
+    grouped_s = statistics.median(samples["grouped_s"])
     speedup = serial_s / max(grouped_s, 1e-9)
     result = {
         "bench": "explore_sim_batch",
         "suite": "fig11_ml@16x16",
         "mode": "smoke" if smoke else "full",
+        "manifest": manifest_block(),
         "pairs": len(pairs),
         "sim_iterations": K,
         "sim_input_batch": B,
@@ -241,15 +331,17 @@ def run_sim(out_path: str = DEFAULT_SIM_OUT, smoke: bool = False) -> dict:
         "serial_s": round(serial_s, 3),
         "grouped_s": round(grouped_s, 3),
         "speedup": round(speedup, 2),
+        "repeats": repeats_block(samples, repeats),
         "bit_identical": bit_identical,
         "ii_identical": ii_identical,
         "verified": verified,
         # registry deltas for the grouped run — check_bench.py asserts the
         # dispatch/group entries agree with the claims above
-        "metrics": metrics_block,
+        "metrics": metrics_blk,
         "note": "schedule+simulate stages only, shared pnr artifacts, cold "
-                "stepper caches (includes jit compiles — the cost of a "
-                "fresh simulate=True exploration)",
+                "stepper caches per repeat (includes jit compiles — the "
+                "cost of a fresh simulate=True exploration); wall-clocks "
+                "are medians over repeats",
     }
     _write(result, out_path)
 
@@ -258,7 +350,7 @@ def run_sim(out_path: str = DEFAULT_SIM_OUT, smoke: bool = False) -> dict:
     emit("explore_sim_grouped", grouped_s * 1e6,
          f"pairs={len(pairs)};dispatches={disp['sim_dispatch']}")
     emit("explore_sim_speedup", grouped_s * 1e6,
-         f"{speedup:.2f}x (target >=3x);out={out_path}")
+         f"{speedup:.2f}x (target >=3x);repeats={repeats};out={out_path}")
     assert bit_identical and ii_identical and verified, \
         "batched schedule/simulate diverged from the per-pair path"
     if smoke:
@@ -275,6 +367,9 @@ def main() -> None:
                          "of pnr (writes BENCH_sim_batch.json)")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced budget + speedup>1 assertion (CI)")
+    ap.add_argument("--repeats", type=int, default=None, metavar="N",
+                    help="timed repeats per mode (default: 3 full, "
+                         "1 smoke); artifacts record median + IQR")
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="also write a Chrome trace of the benchmark run "
                          "(open in Perfetto / `python -m repro.obs.report`)")
@@ -285,9 +380,11 @@ def main() -> None:
         obs.enable_tracing()
     try:
         if args.simulate:
-            run_sim(args.out or DEFAULT_SIM_OUT, smoke=args.smoke)
+            run_sim(args.out or DEFAULT_SIM_OUT, smoke=args.smoke,
+                    repeats=args.repeats)
         else:
-            run(args.out or DEFAULT_OUT, smoke=args.smoke)
+            run(args.out or DEFAULT_OUT, smoke=args.smoke,
+                repeats=args.repeats)
     finally:
         if args.trace:
             tracer = obs.disable_tracing()

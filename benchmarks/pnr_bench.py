@@ -6,11 +6,16 @@ fabrics with both ``score_mode="delta"`` (incremental rescoring of only
 the nets a swap touches) and ``score_mode="full"`` (recompute all N nets
 per move), verifies the two modes return bit-identical placements, and
 reports the per-sweep speedup — the number that bounds how much design
-space the DSE loop can sweep.  Results land in machine-readable
-``results/BENCH_pnr.json`` so the perf trajectory is tracked across PRs;
+space the DSE loop can sweep.  Each timed anneal is re-run ``--repeats N``
+times (default 3 at full budget, 1 in smoke) and the report carries the
+median plus a median/IQR ``repeats`` sub-block per size — never a lone
+wall-clock.  Results land in machine-readable ``results/BENCH_pnr.json``
+(schema ``pnr_bench/v2``, with an embedded run manifest) so the perf
+trajectory is tracked across PRs by ``python -m repro.obs.regress``;
 acceptance floor is a >=5x speedup at 32x32 plus a completed 64x64 anneal.
 
-Run:  PYTHONPATH=src python -m benchmarks.pnr_bench [--smoke] [--out P]
+Run:  PYTHONPATH=src python -m benchmarks.pnr_bench \
+          [--smoke] [--repeats N] [--out P]
 """
 
 from __future__ import annotations
@@ -18,6 +23,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import statistics
 import time
 
 import numpy as np
@@ -29,7 +35,7 @@ from repro.fabric import (FabricSpec, extract_netlist, lower, place,
                           route_nets, synthetic_netlist)
 from repro.fabric.place import anneal_jax, anneal_python
 
-from .common import emit
+from .common import emit, manifest_block, repeats_block
 
 DEFAULT_OUT = os.path.join("results", "BENCH_pnr.json")
 SWEEPS = 24
@@ -42,18 +48,28 @@ SCALE_CHAINS = 1
 
 
 def _timed_anneal(problem, score_mode: str, *, chains: int, sweeps: int,
-                  seed: int):
-    """(wall seconds, slots, costs) for one steady-state annealer call."""
+                  seed: int, repeats: int = 1):
+    """(wall-second samples, slots, costs) for steady-state annealer calls.
+
+    Each repeat re-runs the already-compiled program on the same seed, so
+    the samples measure dispatch+run noise while slots/costs stay
+    bit-identical across repeats.
+    """
     anneal_jax(problem, chains=chains, seed=seed, sweeps=sweeps,
                score_mode=score_mode)                   # trace + compile
-    t0 = time.perf_counter()
-    slots, costs = anneal_jax(problem, chains=chains, seed=seed + 1,
-                              sweeps=sweeps, score_mode=score_mode)
-    return time.perf_counter() - t0, slots, costs
+    samples = []
+    slots = costs = None
+    for _ in range(max(1, repeats)):
+        t0 = time.perf_counter()
+        slots, costs = anneal_jax(problem, chains=chains, seed=seed + 1,
+                                  sweeps=sweeps, score_mode=score_mode)
+        samples.append(time.perf_counter() - t0)
+    return samples, slots, costs
 
 
 def scaling_sweep(sizes=SCALE_SIZES, *, sweeps: int = SCALE_SWEEPS,
-                  chains: int = SCALE_CHAINS, seed: int = 4) -> list:
+                  chains: int = SCALE_CHAINS, seed: int = 4,
+                  repeats: int = 1) -> list:
     """Anneal synthetic netlists at each size in both score modes."""
     records = []
     for size in sizes:
@@ -64,15 +80,21 @@ def scaling_sweep(sizes=SCALE_SIZES, *, sweeps: int = SCALE_SWEEPS,
                "n_nets": int(np.count_nonzero(
                    problem.net_mask.any(axis=1))),
                "sweeps": sweeps, "chains": chains}
-        dt_d, slots_d, costs_d = _timed_anneal(
-            problem, "delta", chains=chains, sweeps=sweeps, seed=seed)
-        dt_f, slots_f, costs_f = _timed_anneal(
-            problem, "full", chains=chains, sweeps=sweeps, seed=seed)
+        s_d, slots_d, costs_d = _timed_anneal(
+            problem, "delta", chains=chains, sweeps=sweeps, seed=seed,
+            repeats=repeats)
+        s_f, slots_f, costs_f = _timed_anneal(
+            problem, "full", chains=chains, sweeps=sweeps, seed=seed,
+            repeats=repeats)
+        dt_d = statistics.median(s_d)
+        dt_f = statistics.median(s_f)
         rec["delta_wall_s"] = dt_d
         rec["full_wall_s"] = dt_f
         rec["delta_us_per_sweep"] = dt_d * 1e6 / sweeps
         rec["full_us_per_sweep"] = dt_f * 1e6 / sweeps
         rec["speedup"] = dt_f / dt_d
+        rec["repeats"] = repeats_block(
+            {"delta_wall_s": s_d, "full_wall_s": s_f}, repeats)
         rec["delta_hpwl"] = float(np.min(costs_d))
         rec["full_hpwl"] = float(np.min(costs_f))
         rec["bit_identical"] = bool(np.array_equal(slots_d, slots_f)
@@ -92,7 +114,8 @@ def scaling_sweep(sizes=SCALE_SIZES, *, sweeps: int = SCALE_SWEEPS,
     return records
 
 
-def anneal_64x64(*, chains: int = 2, sweeps: int = 8, seed: int = 4) -> dict:
+def anneal_64x64(*, chains: int = 2, sweeps: int = 8, seed: int = 4,
+                 repeats: int = 1) -> dict:
     """A realistic-budget 64x64 anneal — only feasible with delta scoring;
     records the completed run the ROADMAP scaling item asks for."""
     spec = FabricSpec(rows=64, cols=64)
@@ -101,13 +124,18 @@ def anneal_64x64(*, chains: int = 2, sweeps: int = 8, seed: int = 4) -> dict:
     anneal_jax(problem, chains=chains, seed=seed, sweeps=sweeps,
                score_mode="delta")                      # trace + compile
     compile_s = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    _, costs = anneal_jax(problem, chains=chains, seed=seed + 1,
-                          sweeps=sweeps, score_mode="delta")
-    wall = time.perf_counter() - t0
+    samples = []
+    costs = None
+    for _ in range(max(1, repeats)):
+        t0 = time.perf_counter()
+        _, costs = anneal_jax(problem, chains=chains, seed=seed + 1,
+                              sweeps=sweeps, score_mode="delta")
+        samples.append(time.perf_counter() - t0)
+    wall = statistics.median(samples)
     rec = {"rows": 64, "cols": 64, "chains": chains, "sweeps": sweeps,
            "score_mode": "delta", "wall_s": wall,
            "compile_and_first_run_s": compile_s,
+           "repeats": repeats_block({"wall_s": samples}, repeats),
            "n_cells": problem.n_pe_cells + problem.n_io_cells,
            "best_hpwl": float(np.min(costs)), "completed": True}
     emit("pnr_anneal_64x64_delta", wall * 1e6,
@@ -183,19 +211,25 @@ def harris_bench() -> dict:
     return out
 
 
-def run(out_path: str = DEFAULT_OUT, smoke: bool = False) -> dict:
+def run(out_path: str = DEFAULT_OUT, smoke: bool = False,
+        repeats=None) -> dict:
     import jax
 
-    report = {"schema": "pnr_bench/v1",
+    if repeats is None:
+        repeats = 1 if smoke else 3
+    repeats = max(1, int(repeats))
+    report = {"schema": "pnr_bench/v2",
               "host_backend": jax.default_backend(),
-              "smoke": smoke}
+              "smoke": smoke,
+              "manifest": manifest_block(),
+              "repeats": {"n": repeats}}
     if smoke:
         # CI smoke: 8x8, 2 sweeps, both score modes — proves the delta and
         # full programs still agree and keeps a perf datapoint per PR
-        report["sizes"] = scaling_sweep((8,), sweeps=2)
+        report["sizes"] = scaling_sweep((8,), sweeps=2, repeats=repeats)
     else:
-        report["sizes"] = scaling_sweep()
-        report["anneal64"] = anneal_64x64()
+        report["sizes"] = scaling_sweep(repeats=repeats)
+        report["anneal64"] = anneal_64x64(repeats=repeats)
         report["harris"] = harris_bench()
     os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
     with open(out_path, "w") as f:
@@ -209,9 +243,12 @@ def main() -> None:
     ap.add_argument("--out", default=DEFAULT_OUT)
     ap.add_argument("--smoke", action="store_true",
                     help="8x8 only, 2 sweeps, both score modes (CI step)")
+    ap.add_argument("--repeats", type=int, default=None, metavar="N",
+                    help="timed repeats per anneal (default: 3 full, "
+                         "1 smoke); the report records median + IQR")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    run(args.out, smoke=args.smoke)
+    run(args.out, smoke=args.smoke, repeats=args.repeats)
 
 
 if __name__ == "__main__":

@@ -17,7 +17,7 @@ import sys
 import time
 
 
-def _benchmarks():
+def _benchmarks(repeats=None):
     from . import (explore_bench, fabric_camera_bench, fabric_ml_bench,
                    fig8_camera_specialization, fig10_image_pe_ip,
                    fig11_ml_pe, kernel_bench, mining_bench, pnr_bench,
@@ -29,10 +29,11 @@ def _benchmarks():
         ("fig11_ml_pe", fig11_ml_pe.run),                  # Fig. 11
         ("table1", table1_cgra_vs_asic.run),               # Table I
         ("kernels", kernel_bench.run),  # TPU-adaptation kernel statistics
-        ("pnr", pnr_bench.run),         # placer scaling (delta vs full)
+        # placer scaling (delta vs full), median of --repeats
+        ("pnr", lambda: pnr_bench.run(repeats=repeats)),
         ("sim", sim_bench.run),         # time domain: achieved II + golden
         # batched vs serial pnr stage
-        ("explore", lambda: explore_bench.run(smoke=True)),
+        ("explore", lambda: explore_bench.run(smoke=True, repeats=repeats)),
         # Fig. 11 @ 16x16 -> records jsonl
         ("fabric_ml", lambda: fabric_ml_bench.run(fast=True)),
         # camera @ auto-fit 18x17 fabric
@@ -62,12 +63,16 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--trace-dir", default=None, metavar="DIR",
                     help="write one Chrome trace per benchmark into DIR")
+    ap.add_argument("--repeats", type=int, default=None, metavar="N",
+                    help="timed repeats for the repeat-aware benches "
+                         "(pnr/explore); their BENCH jsons record "
+                         "median + IQR")
     args = ap.parse_args(argv)
     if args.trace_dir:
         os.makedirs(args.trace_dir, exist_ok=True)
     print("name,us_per_call,derived")
     t0 = time.time()
-    for name, fn in _benchmarks():
+    for name, fn in _benchmarks(repeats=args.repeats):
         if args.trace_dir:
             _run_traced(name, fn, args.trace_dir)
         else:

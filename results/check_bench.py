@@ -44,7 +44,78 @@ METRIC_KEYS = frozenset({
     "pnr_dispatch", "sim_dispatch", "sched_group", "sched_attempts",
     "sched_rounds", "sched_scans", "sched_backtracks",
     "memo_hit", "memo_miss", "compile_events", "compile_secs",
+    "host_peak_bytes", "device_bytes",
 })
+
+#: the run-manifest contract, mirrored from src/repro/obs/manifest.py —
+#: this gate runs stdlib-only in CI (no PYTHONPATH), so the contract is
+#: restated here; drift between the two fails the gate on regenerated
+#: artifacts, which is the point.
+MANIFEST_SCHEMA = 1
+MANIFEST_KEYS = frozenset({
+    "schema", "git_sha", "python", "jax", "jaxlib", "platform",
+    "device_kind", "backend", "cpu_count", "xla_cache",
+})
+XLA_CACHE_STATES = ("off", "cold", "warm")
+
+#: keys of one summarize_repeats() entry in a ``repeats`` block
+REPEAT_STAT_KEYS = frozenset({"n", "median", "iqr", "min", "max"})
+
+
+def _manifest(data: Dict, path: str, errors: List[str]) -> None:
+    """Every BENCH artifact must say what environment produced it."""
+    man = data.get("manifest")
+    if not isinstance(man, dict):
+        errors.append(f"{path}: missing manifest block (regenerate the "
+                      f"artifact — perf numbers without provenance are "
+                      f"not comparable)")
+        return
+    for key in sorted(set(man) - MANIFEST_KEYS):
+        errors.append(f"{path}: unknown manifest key {key!r} — update "
+                      f"MANIFEST_KEYS in results/check_bench.py to match "
+                      f"src/repro/obs/manifest.py")
+    for key in sorted(MANIFEST_KEYS - set(man)):
+        errors.append(f"{path}: manifest missing key {key!r}")
+    if man.get("schema") != MANIFEST_SCHEMA:
+        errors.append(f"{path}: manifest schema {man.get('schema')!r}, "
+                      f"expected {MANIFEST_SCHEMA}")
+    cpus = man.get("cpu_count")
+    if "cpu_count" in man and (not isinstance(cpus, int) or cpus < 1):
+        errors.append(f"{path}: manifest cpu_count={cpus!r}, expected a "
+                      f"positive int")
+    if "xla_cache" in man and man.get("xla_cache") not in XLA_CACHE_STATES:
+        errors.append(f"{path}: manifest xla_cache={man.get('xla_cache')!r},"
+                      f" expected one of {XLA_CACHE_STATES}")
+
+
+def _repeat_stats(block: Dict, where: str, errors: List[str]) -> None:
+    for key, val in sorted(block.items()):
+        if key == "n":
+            if not isinstance(val, int) or val < 1:
+                errors.append(f"{where}: repeats n={val!r}, expected a "
+                              f"positive int")
+            continue
+        if not isinstance(val, dict) or set(val) != REPEAT_STAT_KEYS:
+            errors.append(f"{where}: repeats[{key!r}] must be a "
+                          f"{{n, median, iqr, min, max}} summary, got "
+                          f"{val!r}")
+            continue
+        bad = [k for k in ("median", "iqr", "min", "max")
+               if not isinstance(val[k], (int, float)) or val[k] < 0]
+        for k in bad:
+            errors.append(f"{where}: repeats[{key!r}][{k!r}]={val[k]!r}, "
+                          f"expected a non-negative number")
+
+
+def _repeats(data: Dict, path: str, errors: List[str]) -> None:
+    """Wall-clocks must be medians over repeats, never a lone sample."""
+    block = data.get("repeats")
+    if not isinstance(block, dict) or "n" not in block:
+        errors.append(f"{path}: missing repeats block (regenerate with "
+                      f"--repeats; single-shot wall-clocks are not "
+                      f"accepted)")
+        return
+    _repeat_stats(block, path, errors)
 
 
 def _metrics(data: Dict, path: str, errors: List[str],
@@ -76,6 +147,8 @@ def _metrics(data: Dict, path: str, errors: List[str],
 
 def check_explore_pnr(data: Dict, path: str, errors: List[str]) -> str:
     """Batched pnr must beat the serial loop and never add dispatches."""
+    _manifest(data, path, errors)
+    _repeats(data, path, errors)
     _ratio(data, path, "speedup", errors)
     if data.get("grouped_dispatches", 0) > data.get("serial_dispatches", 0):
         errors.append(f"{path}: grouped used more dispatches than serial")
@@ -88,6 +161,8 @@ def check_explore_pnr(data: Dict, path: str, errors: List[str]) -> str:
 
 def check_explore_sim(data: Dict, path: str, errors: List[str]) -> str:
     """Batched schedule/simulate must beat serial AND stay bit-identical."""
+    _manifest(data, path, errors)
+    _repeats(data, path, errors)
     _ratio(data, path, "speedup", errors)
     _flag(data, path, "bit_identical", errors)
     _flag(data, path, "ii_identical", errors)
@@ -104,10 +179,17 @@ def check_pnr_bench(data: Dict, path: str, errors: List[str]) -> str:
     """Delta scoring must stay bit-identical to full recompute at every
     size (the delta-vs-full *speedup* is only gated at sizes where it is
     not smoke-budget noise)."""
+    _manifest(data, path, errors)
+    _repeats(data, path, errors)
     sizes = data.get("sizes", [])
     if not sizes:
         errors.append(f"{path}: no sizes[] entries")
     for s in sizes:
+        where = f"{path}:{s.get('rows')}x{s.get('cols')}"
+        if isinstance(s.get("repeats"), dict):
+            _repeat_stats(s["repeats"], where, errors)
+        else:
+            errors.append(f"{where}: missing per-size repeats block")
         if s.get("bit_identical") is not True:
             errors.append(f"{path}: {s.get('rows')}x{s.get('cols')} "
                           f"delta/full not bit-identical")
@@ -123,7 +205,7 @@ def check_pnr_bench(data: Dict, path: str, errors: List[str]) -> str:
 CHECKS = {
     "explore_pnr_batch": check_explore_pnr,
     "explore_sim_batch": check_explore_sim,
-    "pnr_bench/v1": check_pnr_bench,
+    "pnr_bench/v2": check_pnr_bench,
 }
 
 

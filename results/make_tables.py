@@ -7,7 +7,15 @@ import sys
 def load(path):
     rows = []
     for line in open(path):
-        rows.append(json.loads(line))
+        line = line.strip()
+        if not line:
+            continue
+        d = json.loads(line)
+        if "manifest" in d:
+            # run-manifest header (see repro.obs.manifest) — provenance,
+            # not a data row
+            continue
+        rows.append(d)
     return rows
 
 
@@ -94,11 +102,61 @@ def stages_table(path):
     return stage_table(load_trace_rows(path), markdown=True)
 
 
+#: trend columns shown first when present (the headline numbers)
+_TREND_PREFERRED = ("speedup", "serial_s", "grouped_s")
+_TREND_MAX_COLS = 8
+
+
+def trend_table(history_dir, limit=12):
+    """Per-bench markdown trend tables from ``results/history/*.jsonl``
+    (rows appended by ``python -m repro.obs.regress --append``): one table
+    per benchmark, newest ``limit`` commits, headline metrics as columns.
+    """
+    import glob
+    import os
+
+    out = []
+    for path in sorted(glob.glob(os.path.join(history_dir, "*.jsonl"))):
+        rows = [r for r in load(path) if isinstance(r, dict)][-limit:]
+        if not rows:
+            continue
+        bench = rows[-1].get("bench", os.path.basename(path))
+        numeric = sorted({k for r in rows
+                          for k, v in (r.get("metrics") or {}).items()
+                          if isinstance(v, (int, float))
+                          and not isinstance(v, bool)})
+        keys = [k for k in _TREND_PREFERRED if k in numeric]
+        keys += [k for k in numeric
+                 if k not in keys][:_TREND_MAX_COLS - len(keys)]
+        out.append(f"### {bench}")
+        out.append("| sha | mode | ts | " + " | ".join(keys) + " |")
+        out.append("|---|---|---|" + "---:|" * len(keys))
+        for r in rows:
+            cells = []
+            for k in keys:
+                v = (r.get("metrics") or {}).get(k)
+                cells.append(f"{v:.4g}" if isinstance(v, (int, float))
+                             and not isinstance(v, bool) else "-")
+            ts = r.get("ts")
+            if isinstance(ts, (int, float)):
+                import datetime
+                ts = datetime.datetime.fromtimestamp(
+                    ts, datetime.timezone.utc).strftime("%Y-%m-%d")
+            out.append(f"| {str(r.get('sha', ''))[:10]} "
+                       f"| {r.get('mode', '')} | {ts} | "
+                       + " | ".join(cells) + " |")
+        out.append("")
+    return "\n".join(out) if out else "(no history rows yet)"
+
+
 if __name__ == "__main__":
     path = sys.argv[1] if len(sys.argv) > 1 else "results/baseline.jsonl"
     which = sys.argv[2] if len(sys.argv) > 2 else "roofline"
     if which == "stages":
         print(stages_table(path))
+        sys.exit(0)
+    if which == "trend":
+        print(trend_table(path))
         sys.exit(0)
     rows = load(path)
     if which == "roofline":

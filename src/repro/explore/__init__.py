@@ -23,10 +23,12 @@ from the command line.
 from .config import CONFIG_SCHEMA, ExploreConfig
 from .pipeline import (Explorer, ExploreResult, evaluate_pairs, graph_key,
                        pnr_grouped)
-from .records import RECORD_SCHEMA, ExploreRecord, from_jsonl, to_jsonl
+from .records import (RECORD_SCHEMA, ExploreRecord, from_jsonl,
+                      read_manifest, to_jsonl)
 
 __all__ = [
     "CONFIG_SCHEMA", "ExploreConfig", "Explorer", "ExploreResult",
     "evaluate_pairs", "graph_key", "pnr_grouped",
     "RECORD_SCHEMA", "ExploreRecord", "from_jsonl", "to_jsonl",
+    "read_manifest",
 ]

@@ -54,6 +54,7 @@ from ..core.mining import MinedSubgraph, mine_frequent_subgraphs
 from ..core.mis import rank_by_mis
 from ..graphir.graph import Graph
 from ..obs import event as obs_event, span
+from ..obs.memprof import stage_memory
 from ..obs.metrics import CounterView, MetricsRegistry
 from .config import ExploreConfig
 from .records import ExploreRecord
@@ -345,6 +346,20 @@ class Explorer:
         return Explorer(self.apps, self.config.replace(**changes),
                         store=self._store, metrics=self.metrics)
 
+    def forget(self, *stages: str) -> int:
+        """Drop memoized artifacts of the named stages ("pnr", "sched",
+        "sim", ...); returns the number of entries evicted.
+
+        The repeat-based benchmarks use this to re-run a stage cold N
+        times from the same shared upstream artifacts — the memo would
+        otherwise answer every repeat after the first from the store.
+        """
+        victims = [k for k in self._store
+                   if isinstance(k, tuple) and k and k[0] in stages]
+        for k in victims:
+            del self._store[k]
+        return len(victims)
+
     def _memo(self, key: Tuple, stage: str, thunk: Callable[[], Any],
               **attrs: Any) -> Any:
         if key not in self._store:
@@ -360,7 +375,7 @@ class Explorer:
     def mine(self) -> Dict[str, List[MinedSubgraph]]:
         cfg = self.config
         out = {}
-        with span("mine"):
+        with span("mine"), stage_memory(self.metrics, "mine"):
             for name, app in self.apps.items():
                 key = ("mine", self._app_keys[name], _mining_fields(cfg))
                 out[name] = self._memo(
@@ -372,7 +387,7 @@ class Explorer:
     def rank(self) -> Dict[str, List[MinedSubgraph]]:
         mined = self.mine()
         out = {}
-        with span("rank"):
+        with span("rank"), stage_memory(self.metrics, "rank"):
             for name in self.apps:
                 key = ("rank", self._app_keys[name],
                        _mining_fields(self.config))
@@ -399,7 +414,7 @@ class Explorer:
         """
         ranked = self.rank()
         cfg = self.config
-        with span("merge"):
+        with span("merge"), stage_memory(self.metrics, "merge"):
             if cfg.mode == "per_app":
                 return {name: self._memo(
                             self._merge_key(name), "merge",
@@ -461,7 +476,7 @@ class Explorer:
 
     def map(self) -> Dict[Pair, Mapping]:
         out = {}
-        with span("map"):
+        with span("map"), stage_memory(self.metrics, "map"):
             for v, app_name, key in self._pairs():
                 out[(v.name, app_name)] = self._memo(
                     key, "map", lambda v=v, a=app_name: map_application(
@@ -504,7 +519,8 @@ class Explorer:
 
         grouped = (cfg.pnr_batch == "grouped" and options.backend == "jax"
                    and options.hpwl_backend == "jnp")
-        with span("pnr", pairs=len(keys), misses=len(misses)):
+        with span("pnr", pairs=len(keys), misses=len(misses)), \
+                stage_memory(self.metrics, "pnr"):
             if misses and grouped:
                 items = [(v.name, v.datapath, mappings[(v.name, a)],
                           self.apps[a], zlib.crc32(repr(key).encode()))
@@ -551,7 +567,8 @@ class Explorer:
             else:
                 self.metrics.inc("memo.hit.sched")
 
-        with span("schedule", pairs=len(keys), misses=len(misses)):
+        with span("schedule", pairs=len(keys), misses=len(misses)), \
+                stage_memory(self.metrics, "schedule"):
             if misses and cfg.sim_batch == "grouped":
                 items = [(v.datapath, mappings[(v.name, a)], self.apps[a],
                           pnrs[(v.name, a)]) for v, a, key in misses]
@@ -603,7 +620,8 @@ class Explorer:
 
         grouped = (cfg.sim_batch == "grouped"
                    and options.sim_backend == "jax" and options.sim_verify)
-        with span("simulate", pairs=len(keys), misses=len(misses)):
+        with span("simulate", pairs=len(keys), misses=len(misses)), \
+                stage_memory(self.metrics, "simulate"):
             if misses and grouped:
                 from ..sim import (compare_with_interp, random_inputs,
                                    sim_signature, simulate_batch)

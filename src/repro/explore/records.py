@@ -90,11 +90,25 @@ class ExploreRecord:
         return ExploreRecord(**d)
 
 
-def to_jsonl(records: Iterable[ExploreRecord], path: str) -> int:
-    """Write one record per line; returns the row count."""
+def to_jsonl(records: Iterable[ExploreRecord], path: str, *,
+             manifest: Dict[str, Any] = None) -> int:
+    """Write one record per line; returns the row count.
+
+    The first line is a run-manifest header (``{"schema": ...,
+    "manifest": {...}}`` — what environment produced these rows; see
+    :mod:`repro.obs.manifest`).  :func:`from_jsonl` skips it
+    transparently; :func:`read_manifest` reads it back.  Pass
+    ``manifest=None`` (the default) to capture the current process's, or
+    an explicit dict to embed a foreign one.
+    """
+    if manifest is None:
+        from ..obs.manifest import capture
+        manifest = capture().to_dict()
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     n = 0
     with open(path, "w") as f:
+        f.write(json.dumps({"schema": RECORD_SCHEMA,
+                            "manifest": manifest}) + "\n")
         for r in records:
             f.write(json.dumps(r.to_dict()) + "\n")
             n += 1
@@ -102,11 +116,28 @@ def to_jsonl(records: Iterable[ExploreRecord], path: str) -> int:
 
 
 def from_jsonl(path: str) -> List[ExploreRecord]:
-    """Read records back, validating the schema version per row."""
+    """Read records back, validating the schema version per row (the
+    manifest header line, when present, is skipped)."""
     out = []
     with open(path) as f:
         for line in f:
             line = line.strip()
-            if line:
-                out.append(ExploreRecord.from_dict(json.loads(line)))
+            if not line:
+                continue
+            d = json.loads(line)
+            if "manifest" in d:          # header line, not a record
+                continue
+            out.append(ExploreRecord.from_dict(d))
     return out
+
+
+def read_manifest(path: str) -> Dict[str, Any]:
+    """The run manifest embedded in a records jsonl ({} for pre-manifest
+    files written before the trajectory layer)."""
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                d = json.loads(line)
+                return d.get("manifest", {}) if "manifest" in d else {}
+    return {}

@@ -14,7 +14,17 @@ computed bit (CI-tested).  Three cooperating pieces:
 
 Post-pnr utilization / operand-skew reports live in
 :mod:`repro.obs.analyzer`; ``python -m repro.obs.report`` summarizes
-exported artifacts.  Typical session::
+exported artifacts.
+
+The performance *trajectory* is first-class on top of these
+(:mod:`repro.obs.manifest` / :mod:`repro.obs.diff` /
+:mod:`repro.obs.history` / ``python -m repro.obs.regress``): every
+artifact embeds a run manifest, benchmarks record median+IQR over
+repeats instead of lone samples, two artifacts diff with noise-aware
+thresholds (exact series: zero tolerance), and per-commit history rows
+under ``results/history/`` back a CI-wired regression detector.
+:mod:`repro.obs.memprof` adds per-stage host-peak / device-byte gauges
+when telemetry is on.  Typical session::
 
     from repro import obs
     tracer = obs.enable_tracing()
@@ -46,6 +56,10 @@ from .metrics import (CounterView, Histogram, MetricsRegistry,
 from .trace import (Span, Tracer, current as current_tracer,
                     disable as disable_tracing, enable as enable_tracing,
                     event, span)
+from .manifest import RunManifest, capture as capture_manifest
+from .diff import (NoiseModel, StageDelta, diff_metrics, diff_traces,
+                   summarize_repeats)
+from . import diff, history, manifest, memprof
 
 __all__ = [
     "span", "event", "enable_tracing", "disable_tracing", "current_tracer",
@@ -54,4 +68,8 @@ __all__ = [
     "reset_global_registry",
     "jaxprof", "enable_telemetry", "telemetry_enabled",
     "analyze_pnr", "PnrReport", "OperandSkew",
+    "RunManifest", "capture_manifest",
+    "NoiseModel", "StageDelta", "diff_metrics", "diff_traces",
+    "summarize_repeats",
+    "diff", "history", "manifest", "memprof",
 ]

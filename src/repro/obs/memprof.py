@@ -1,0 +1,72 @@
+"""Memory observability: per-stage host peaks + live JAX device bytes.
+
+Wall-clock is only half of a stage's cost on a shared runner; the other
+half is footprint.  :func:`stage_memory` wraps a pipeline stage and —
+only while :func:`repro.obs.enable_telemetry` is on, because tracemalloc
+is far too expensive to leave armed — records two registry gauges:
+
+* ``mem.host_peak_bytes.<stage>`` — peak traced host allocation inside
+  the stage (``tracemalloc``; the peak counter is reset at stage entry,
+  so nested stages report their own region);
+* ``mem.device_bytes.<stage>`` — live JAX device-buffer bytes at stage
+  exit (the sum of ``jax.live_arrays()`` sizes), i.e. what the stage
+  left resident.
+
+Both flow into the benchmarks' ``metrics`` blocks (``host_peak_bytes`` /
+``device_bytes`` in ``results/check_bench.py``'s METRIC_KEYS) and from
+there into the ``results/history/`` trajectory.  Observation only — no
+computed bit depends on any of it.
+"""
+
+from __future__ import annotations
+
+import tracemalloc
+from contextlib import contextmanager
+from typing import Optional
+
+from .metrics import MetricsRegistry
+
+__all__ = ["stage_memory", "device_bytes", "host_peak_gauges"]
+
+
+def device_bytes() -> int:
+    """Total bytes of live JAX arrays on device (0 if unmeasurable)."""
+    try:
+        import jax
+        return int(sum(getattr(a, "nbytes", 0) for a in jax.live_arrays()))
+    except Exception:
+        return 0
+
+
+@contextmanager
+def stage_memory(registry: Optional[MetricsRegistry], stage: str):
+    """Record host-peak / device-byte gauges for one stage.
+
+    A no-op (one function call, no clock or allocator work) unless
+    telemetry is enabled and a registry is given.
+    """
+    from . import telemetry_enabled
+    if registry is None or not telemetry_enabled():
+        yield
+        return
+    started_here = not tracemalloc.is_tracing()
+    if started_here:
+        tracemalloc.start()
+    else:
+        tracemalloc.reset_peak()
+    try:
+        yield
+    finally:
+        _, peak = tracemalloc.get_traced_memory()
+        registry.set_gauge(f"mem.host_peak_bytes.{stage}", int(peak))
+        registry.set_gauge(f"mem.device_bytes.{stage}", device_bytes())
+        if started_here:
+            tracemalloc.stop()
+
+
+def host_peak_gauges(registry: MetricsRegistry) -> dict:
+    """{stage: peak bytes} for every recorded host-peak gauge."""
+    prefix = "mem.host_peak_bytes."
+    doc = registry.to_dict()["gauges"]
+    return {k[len(prefix):]: v for k, v in doc.items()
+            if k.startswith(prefix)}

@@ -13,16 +13,28 @@ from __future__ import annotations
 
 import argparse
 import json
+import sys
 from typing import Any, Dict, List
 
-__all__ = ["load_trace_rows", "aggregate_stages", "stage_table", "main"]
+__all__ = ["TraceFormatError", "load_trace_rows", "aggregate_stages",
+           "stage_table", "main"]
+
+
+class TraceFormatError(ValueError):
+    """A trace file that is empty, truncated, or not a trace at all —
+    reported as a one-line error by the CLI, never a stack trace."""
 
 
 def load_trace_rows(path: str) -> List[Dict[str, Any]]:
     """Normalize a trace file (Chrome JSON or flat jsonl) to flat rows
-    with ``name`` / ``dur_s`` / ``depth`` / ``attrs``."""
+    with ``name`` / ``dur_s`` / ``depth`` / ``attrs``.
+
+    Raises :class:`TraceFormatError` on empty or truncated input.
+    """
     with open(path) as fh:
         text = fh.read()
+    if not text.strip():
+        raise TraceFormatError(f"{path}: empty trace file")
     # Chrome export is one JSON document with "traceEvents"; jsonl lines
     # also start with "{", so detect by parsing, not by first character
     try:
@@ -40,7 +52,17 @@ def load_trace_rows(path: str) -> List[Dict[str, Any]]:
                          "depth": 0 if ev.get("tid") == 1 else 1,
                          "attrs": ev.get("args", {})})
         return rows
-    return [json.loads(line) for line in text.splitlines() if line.strip()]
+    rows = []
+    for i, line in enumerate(text.splitlines(), 1):
+        if not line.strip():
+            continue
+        try:
+            rows.append(json.loads(line))
+        except json.JSONDecodeError:
+            raise TraceFormatError(
+                f"{path}: line {i} is not valid JSON — not a Chrome "
+                f"trace or spans jsonl (truncated write?)") from None
+    return rows
 
 
 def aggregate_stages(rows: List[Dict[str, Any]]) -> List[Dict[str, Any]]:
@@ -52,7 +74,9 @@ def aggregate_stages(rows: List[Dict[str, Any]]) -> List[Dict[str, Any]]:
         a["count"] += 1
         a["total_s"] += r.get("dur_s", 0.0)
         a["max_s"] = max(a["max_s"], r.get("dur_s", 0.0))
-    out = sorted(agg.values(), key=lambda a: -a["total_s"])
+    # name breaks total_s ties so the table order is deterministic even
+    # when durations collide (common for sub-ms spans rounded in export)
+    out = sorted(agg.values(), key=lambda a: (-a["total_s"], a["name"]))
     for a in out:
         a["mean_s"] = a["total_s"] / a["count"]
     return out
@@ -113,7 +137,14 @@ def main(argv=None) -> int:
     if not args.trace and not args.metrics:
         ap.error("give a trace file and/or --metrics")
     if args.trace:
-        rows = load_trace_rows(args.trace)
+        try:
+            rows = load_trace_rows(args.trace)
+        except TraceFormatError as e:
+            print(f"error: {e}", file=sys.stderr)
+            return 2
+        except OSError as e:
+            print(f"error: {e}", file=sys.stderr)
+            return 2
         print(f"-- stage timing ({len(rows)} spans) --")
         print(stage_table(rows, markdown=args.markdown, limit=args.limit))
     if args.metrics:

@@ -184,8 +184,12 @@ class Tracer:
         return {"traceEvents": events, "displayTimeUnit": "ms"}
 
     def write_chrome(self, path: str) -> None:
+        doc = self.to_chrome()
+        # every exported trace records what environment produced it
+        from .manifest import capture
+        doc["metadata"] = {"manifest": capture().to_dict()}
         with open(path, "w") as fh:
-            json.dump(self.to_chrome(), fh)
+            json.dump(doc, fh)
 
     def to_rows(self) -> List[Dict[str, Any]]:
         """Flat rows for jsonl export (main tree + side tracks)."""

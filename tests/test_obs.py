@@ -121,7 +121,12 @@ def test_chrome_export_schema_and_containment(tracer, tmp_path):
 
     path = str(tmp_path / "t.trace.json")
     tracer.write_chrome(path)
-    assert json.load(open(path)) == doc            # valid JSON round trip
+    written = json.load(open(path))                # valid JSON round trip
+    # the written file additionally embeds the run manifest
+    assert written["traceEvents"] == doc["traceEvents"]
+    assert written["displayTimeUnit"] == doc["displayTimeUnit"]
+    man = written["metadata"]["manifest"]
+    assert man["schema"] == 1 and man["xla_cache"] in ("off", "cold", "warm")
 
 
 def test_jsonl_export_and_report_loaders(tracer, tmp_path):

@@ -1,0 +1,539 @@
+"""Performance-trajectory layer: manifests, noise-aware diffing, the
+history store, and the regression detector (PR 7).
+
+Covers the ISSUE acceptance points directly: manifest capture is
+deterministic, repeats summaries carry median/IQR, a golden trace pair
+with a known stage delta diffs correctly (exact series at zero
+tolerance), history append is idempotent per (sha, bench, mode), and
+``repro.obs.regress`` flags an injected synthetic regression while
+passing on the committed artifacts.
+"""
+
+import importlib.util
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro import obs
+from repro.obs import history as history_mod
+from repro.obs import regress as regress_mod
+from repro.obs.diff import (NoiseModel, diff_metrics, diff_stage_rows,
+                            summarize_repeats)
+from repro.obs.manifest import (MANIFEST_SCHEMA, RunManifest, capture,
+                                validate_manifest)
+from repro.obs.report import TraceFormatError, aggregate_stages, \
+    load_trace_rows
+from repro.obs.report import main as report_main
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# manifests
+# ---------------------------------------------------------------------------
+def test_manifest_capture_is_deterministic_and_valid():
+    a = capture()
+    b = capture()
+    assert a == b                        # cached: literally the same record
+    d = a.to_dict()
+    assert validate_manifest(d) == []
+    assert d["schema"] == MANIFEST_SCHEMA
+    assert d["xla_cache"] in ("off", "cold", "warm")
+    assert isinstance(d["cpu_count"], int) and d["cpu_count"] >= 1
+    # round-trip through the validating constructor
+    assert RunManifest.from_dict(d) == a
+
+
+def test_manifest_refresh_keeps_stable_fields():
+    a = capture().to_dict()
+    b = capture(refresh=True).to_dict()
+    for k in ("schema", "git_sha", "python", "jax", "jaxlib", "platform",
+              "device_kind", "backend", "cpu_count"):
+        assert a[k] == b[k]
+
+
+def test_validate_manifest_rejects_bad_shapes():
+    good = capture().to_dict()
+    assert validate_manifest("nope") == \
+        ["manifest is str, expected a dict"]
+    missing = dict(good)
+    del missing["git_sha"]
+    assert any("missing field 'git_sha'" in e
+               for e in validate_manifest(missing))
+    unknown = dict(good, extra=1)
+    assert any("unknown field 'extra'" in e
+               for e in validate_manifest(unknown))
+    assert any("schema" in e
+               for e in validate_manifest(dict(good, schema=99)))
+    assert any("cpu_count" in e
+               for e in validate_manifest(dict(good, cpu_count=0)))
+    assert any("xla_cache" in e
+               for e in validate_manifest(dict(good, xla_cache="tepid")))
+    with pytest.raises(ValueError, match="invalid manifest"):
+        RunManifest.from_dict(dict(good, xla_cache="tepid"))
+
+
+def test_written_artifacts_embed_the_manifest(tmp_path):
+    # chrome trace
+    tracer = obs.Tracer()
+    with tracer.span("root"):
+        pass
+    trace_path = str(tmp_path / "t.trace.json")
+    tracer.write_chrome(trace_path)
+    doc = json.load(open(trace_path))
+    assert validate_manifest(doc["metadata"]["manifest"]) == []
+
+    # records jsonl header
+    from repro.explore import read_manifest, to_jsonl
+    rec_path = str(tmp_path / "records.jsonl")
+    to_jsonl([], rec_path)
+    man = read_manifest(rec_path)
+    assert validate_manifest(man) == []
+    # and from_jsonl skips the header transparently
+    from repro.explore import from_jsonl
+    assert from_jsonl(rec_path) == []
+
+
+# ---------------------------------------------------------------------------
+# repeats + noise model
+# ---------------------------------------------------------------------------
+def test_summarize_repeats_known_values():
+    s = summarize_repeats([1.0, 2.0, 3.0, 4.0])
+    assert s == {"n": 4, "median": 2.5, "iqr": 1.5, "min": 1.0, "max": 4.0}
+    single = summarize_repeats([0.7])
+    assert single["n"] == 1 and single["iqr"] == 0.0
+    assert single["median"] == single["min"] == single["max"] == 0.7
+    with pytest.raises(ValueError):
+        summarize_repeats([])
+
+
+def test_noise_model_threshold_takes_the_max_bound():
+    nm = NoiseModel(abs_floor_s=0.005, rel_floor=0.10, iqr_k=3.0)
+    assert nm.threshold(0.001) == 0.005            # abs floor dominates
+    assert nm.threshold(10.0) == pytest.approx(1.0)  # rel floor dominates
+    assert nm.threshold(1.0, iqr=0.5) == pytest.approx(1.5)  # iqr dominates
+
+
+# ---------------------------------------------------------------------------
+# diffing: golden trace pair with a known stage delta
+# ---------------------------------------------------------------------------
+def _rows(pnr_s, sim_s, sim_count=2):
+    rows = [{"name": "pnr", "path": "pnr", "dur_s": pnr_s}]
+    rows += [{"name": "simulate", "path": "simulate",
+              "dur_s": sim_s / sim_count}] * sim_count
+    return rows
+
+
+def test_diff_stage_rows_golden_pair():
+    # golden delta: pnr slowed 1.0s -> 1.5s (significant), simulate moved
+    # within noise, and b gained an extra simulate span (exact count delta)
+    a = _rows(pnr_s=1.0, sim_s=0.40, sim_count=2)
+    b = _rows(pnr_s=1.5, sim_s=0.41, sim_count=3)
+    deltas = {d.path: d for d in diff_stage_rows(
+        a, b, noise=NoiseModel(abs_floor_s=0.005, rel_floor=0.10))}
+    pnr = deltas["pnr"]
+    assert pnr.kind == "time" and pnr.significant
+    assert pnr.delta == pytest.approx(0.5)
+    sim = deltas["simulate"]
+    assert not sim.significant                     # 10ms on 0.4s: noise
+    cnt = deltas["simulate#count"]
+    assert cnt.kind == "exact" and cnt.significant  # 2 -> 3: zero tolerance
+    assert deltas["pnr#count"].significant is False
+
+
+def test_diff_stage_rows_added_and_removed_paths_are_significant():
+    deltas = {d.path: d for d in diff_stage_rows(
+        [{"name": "old", "dur_s": 0.1}], [{"name": "new", "dur_s": 0.1}])}
+    assert deltas["old"].significant and deltas["old"].b is None
+    assert deltas["new"].significant and deltas["new"].a is None
+
+
+def test_diff_stage_rows_iqr_widens_the_bound():
+    a = [{"name": "pnr", "dur_s": 1.0}]
+    b = [{"name": "pnr", "dur_s": 1.3}]
+    tight = diff_stage_rows(a, b)[0]
+    assert tight.significant                        # 30% > 10% rel floor
+    wide = diff_stage_rows(a, b, iqr={"pnr": 0.2})[0]
+    assert not wide.significant                     # 3*IQR = 0.6 bound
+
+
+def test_diff_metrics_exact_vs_timelike():
+    a = {"counters": {"pnr.dispatch": 3, "memo.hit": 10},
+         "gauges": {"mem.host_peak_bytes.pnr": 1000},
+         "histograms": {"jax.compile.secs": {"sum": 1.0, "count": 4}}}
+    b = {"counters": {"pnr.dispatch": 4, "memo.hit": 10},
+         "gauges": {"mem.host_peak_bytes.pnr": 1000},
+         "histograms": {"jax.compile.secs": {"sum": 1.05, "count": 4}}}
+    deltas = {d.path: d for d in diff_metrics(a, b)}
+    assert deltas["counters/pnr.dispatch"].significant   # exact: 3 != 4
+    assert not deltas["counters/memo.hit"].significant
+    assert not deltas["gauges/mem.host_peak_bytes.pnr"].significant
+    # second-valued histogram sum is noise-thresholded, not exact
+    assert deltas["histograms/jax.compile.secs.sum"].kind == "time"
+    assert not deltas["histograms/jax.compile.secs.sum"].significant
+    assert not deltas["histograms/jax.compile.secs.count"].significant
+
+
+def test_diff_traces_cli_flags_exact_drift(tmp_path):
+    from repro.obs.diff import main as diff_main
+    a, b = str(tmp_path / "a.jsonl"), str(tmp_path / "b.jsonl")
+    for path, count in ((a, 2), (b, 3)):
+        with open(path, "w") as fh:
+            for _ in range(count):
+                fh.write(json.dumps({"name": "pnr", "dur_s": 0.1}) + "\n")
+    assert diff_main([a, a]) == 0
+    assert diff_main([a, b]) == 1                  # span count grew: exact
+
+
+# ---------------------------------------------------------------------------
+# history store
+# ---------------------------------------------------------------------------
+def _mk_row(sha, metric_val, mode="full", ts=0.0):
+    man = dict(capture().to_dict(), git_sha=sha)
+    return history_mod.make_row("bench_x", mode,
+                                {"serial_s": metric_val, "speedup": 2.0},
+                                manifest=man, ts=ts)
+
+
+def test_history_append_is_idempotent_per_sha_bench_mode(tmp_path):
+    d = str(tmp_path / "hist")
+    assert history_mod.append(_mk_row("aaa", 1.0), directory=d) is True
+    assert history_mod.append(_mk_row("aaa", 99.0), directory=d) is False
+    assert history_mod.append(_mk_row("aaa", 1.0, mode="smoke"),
+                              directory=d) is True
+    assert history_mod.append(_mk_row("bbb", 2.0), directory=d) is True
+    rows = history_mod.load(d, "bench_x")
+    assert len(rows) == 3
+    # first measurement wins: the 99.0 re-run never landed
+    assert rows[0]["metrics"]["serial_s"] == 1.0
+
+
+def test_history_rolling_stats_windows_and_modes(tmp_path):
+    d = str(tmp_path / "hist")
+    for i in range(12):
+        history_mod.append(_mk_row(f"sha{i}", float(i), ts=float(i)),
+                           directory=d)
+    rows = history_mod.load(d, "bench_x")
+    stats = history_mod.rolling_stats(rows, "serial_s", mode="full",
+                                      window=4)
+    assert stats["n"] == 4 and stats["median"] == 9.5   # last 4: 8..11
+    assert history_mod.rolling_stats(rows, "serial_s", mode="smoke") is None
+    assert history_mod.rolling_stats(rows, "nope") is None
+
+
+def test_history_load_rejects_unknown_schema(tmp_path):
+    d = str(tmp_path / "hist")
+    os.makedirs(d)
+    with open(history_mod.history_path(d, "bench_x"), "w") as fh:
+        fh.write(json.dumps({"schema": 99, "bench": "bench_x"}) + "\n")
+    with pytest.raises(ValueError, match="history schema"):
+        history_mod.load(d, "bench_x")
+
+
+def test_history_path_is_filename_safe():
+    p = history_mod.history_path("h", "pnr_bench/v2")
+    assert "/v2" not in os.path.basename(p)
+    assert p.endswith("pnr_bench_v2.jsonl")
+
+
+# ---------------------------------------------------------------------------
+# the regression detector
+# ---------------------------------------------------------------------------
+def _explore_doc(serial_s=10.0, grouped_s=2.0, dispatches=3):
+    return {
+        "bench": "explore_pnr_batch", "mode": "full",
+        "manifest": capture().to_dict(),
+        "serial_dispatches": 11, "grouped_dispatches": dispatches,
+        "serial_s": serial_s, "grouped_s": grouped_s,
+        "speedup": round(serial_s / grouped_s, 2),
+        "repeats": {"n": 3,
+                    "serial_s": summarize_repeats([serial_s] * 3),
+                    "grouped_s": summarize_repeats([grouped_s] * 3)},
+        "metrics": {"pnr_dispatch": dispatches, "memo_hit": 5},
+    }
+
+
+def _seed_history(tmp_path, n=4):
+    d = str(tmp_path / "hist")
+    for i in range(n):
+        doc = _explore_doc()
+        bench, mode, metrics, _ = regress_mod.flatten_bench(doc)
+        man = dict(doc["manifest"], git_sha=f"seed{i}")
+        history_mod.append(
+            history_mod.make_row(bench, mode, metrics, manifest=man,
+                                 ts=float(i)), directory=d)
+    return d
+
+
+def test_regress_passes_on_a_steady_trajectory(tmp_path):
+    d = _seed_history(tmp_path)
+    findings = regress_mod.check_artifact(_explore_doc(), "x.json",
+                                          history_dir=d)
+    assert all(f.status != "regress" for f in findings)
+
+
+def test_regress_flags_injected_synthetic_regression(tmp_path):
+    d = _seed_history(tmp_path)
+    # inject: grouped wall-clock x3, dispatch count grew, speedup eroded
+    bad = _explore_doc(grouped_s=6.0, dispatches=5)
+    findings = regress_mod.check_artifact(bad, "x.json", history_dir=d)
+    by = {f.metric: f for f in findings}
+    assert by["grouped_s"].status == "regress"
+    assert by["grouped_dispatches"].status == "regress"
+    assert by["metrics.pnr_dispatch"].status == "regress"
+    assert by["speedup"].status == "regress"
+    assert by["serial_s"].status == "ok"
+    # smoke downgrades wall-clock/ratio drifts but count growth still fails
+    smoke = {f.metric: f for f in regress_mod.check_artifact(
+        bad, "x.json", history_dir=d, smoke=True)}
+    assert smoke["grouped_s"].status == "warn"
+    assert smoke["speedup"].status == "warn"
+    assert smoke["grouped_dispatches"].status == "regress"
+
+
+def test_regress_no_baseline_bootstraps(tmp_path):
+    findings = regress_mod.check_artifact(
+        _explore_doc(), "x.json", history_dir=str(tmp_path / "empty"))
+    assert {f.status for f in findings if f.kind in ("time", "ratio",
+                                                     "count")} \
+        == {"no-baseline"}
+
+
+def test_regress_missing_or_invalid_manifest_is_a_regression(tmp_path):
+    doc = _explore_doc()
+    del doc["manifest"]
+    findings = regress_mod.check_artifact(doc, "x.json",
+                                          history_dir=str(tmp_path))
+    assert any(f.metric == "manifest" and f.status == "regress"
+               for f in findings)
+    doc = _explore_doc()
+    doc["manifest"]["xla_cache"] = "tepid"
+    findings = regress_mod.check_artifact(doc, "x.json",
+                                          history_dir=str(tmp_path))
+    assert any(f.metric == "manifest" and f.status == "regress"
+               for f in findings)
+
+
+def test_regress_flag_metrics_fail_hard_even_in_smoke(tmp_path):
+    doc = {
+        "schema": "pnr_bench/v2", "smoke": True,
+        "manifest": capture().to_dict(),
+        "repeats": {"n": 1},
+        "sizes": [{"rows": 8, "cols": 8, "delta_wall_s": 0.1,
+                   "full_wall_s": 0.2, "speedup": 2.0,
+                   "repeats": {"n": 1},
+                   "bit_identical": False}],
+    }
+    findings = regress_mod.check_artifact(doc, "x.json",
+                                          history_dir=str(tmp_path),
+                                          smoke=True)
+    by = {f.metric: f for f in findings}
+    assert by["8x8.bit_identical"].status == "regress"
+
+
+def test_regress_uses_fresh_repeats_iqr(tmp_path):
+    d = _seed_history(tmp_path)
+    # a noisy fresh measurement: median drifted +30% but the artifact's own
+    # IQR documents that spread, so 3*IQR absorbs it
+    doc = _explore_doc()
+    doc["grouped_s"] = 2.6
+    doc["repeats"]["grouped_s"] = summarize_repeats([1.8, 2.6, 3.4])
+    findings = {f.metric: f for f in regress_mod.check_artifact(
+        doc, "x.json", history_dir=d)}
+    assert findings["grouped_s"].status == "ok"
+
+
+def test_regress_cli_append_and_detect(tmp_path):
+    d = str(tmp_path / "hist")
+    art = str(tmp_path / "BENCH_x.json")
+    with open(art, "w") as fh:
+        json.dump(_explore_doc(), fh)
+    assert regress_mod.main([art, "--history", d, "--append"]) == 0
+    assert len(history_mod.load(d, "explore_pnr_batch")) == 1
+    # same sha: idempotent
+    assert regress_mod.main([art, "--history", d, "--append"]) == 0
+    assert len(history_mod.load(d, "explore_pnr_batch")) == 1
+    bad = str(tmp_path / "BENCH_bad.json")
+    with open(bad, "w") as fh:
+        json.dump(_explore_doc(dispatches=7), fh)
+    assert regress_mod.main([bad, "--history", d]) == 1
+
+
+def test_regress_passes_on_committed_artifacts():
+    """The committed BENCH_*.json + committed history must stay green —
+    this is the tier-1 CI step run as a test."""
+    arts = sorted(
+        p for p in (os.path.join(REPO, "results", f)
+                    for f in os.listdir(os.path.join(REPO, "results")))
+        if os.path.basename(p).startswith("BENCH_")
+        and p.endswith(".json"))
+    assert arts, "no committed BENCH_*.json artifacts"
+    hist = os.path.join(REPO, "results", "history")
+    for path in arts:
+        with open(path) as fh:
+            doc = json.load(fh)
+        findings = regress_mod.check_artifact(doc, path, history_dir=hist,
+                                              smoke=True)
+        bad = [f for f in findings if f.status == "regress"]
+        assert not bad, "\n".join(f.line() for f in bad)
+
+
+def test_flatten_bench_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="unknown benchmark kind"):
+        regress_mod.flatten_bench({"bench": "mystery"})
+
+
+# ---------------------------------------------------------------------------
+# report CLI hardening
+# ---------------------------------------------------------------------------
+def test_report_empty_trace_is_a_one_line_error(tmp_path, capsys):
+    path = str(tmp_path / "empty.trace.json")
+    open(path, "w").close()
+    with pytest.raises(TraceFormatError, match="empty trace file"):
+        load_trace_rows(path)
+    assert report_main([path]) == 2
+    err = capsys.readouterr().err
+    assert err.startswith("error: ") and "Traceback" not in err
+
+
+def test_report_truncated_trace_is_a_one_line_error(tmp_path, capsys):
+    path = str(tmp_path / "trunc.jsonl")
+    with open(path, "w") as fh:
+        fh.write(json.dumps({"name": "pnr", "dur_s": 0.1}) + "\n")
+        fh.write('{"name": "simulate", "dur_')       # torn write
+    with pytest.raises(TraceFormatError, match="line 2"):
+        load_trace_rows(path)
+    assert report_main([path]) == 2
+    assert "truncated" in capsys.readouterr().err
+
+
+def test_report_missing_file_is_a_one_line_error(capsys):
+    assert report_main(["/definitely/not/here.json"]) == 2
+    assert capsys.readouterr().err.startswith("error: ")
+
+
+def test_aggregate_stages_orders_ties_deterministically():
+    rows = [{"name": n, "dur_s": 0.25} for n in ("zeta", "alpha", "mid")]
+    rows += [{"name": "big", "dur_s": 1.0}]
+    names = [a["name"] for a in aggregate_stages(rows)]
+    assert names == ["big", "alpha", "mid", "zeta"]
+    # same rows, shuffled input order -> same table
+    names2 = [a["name"] for a in aggregate_stages(list(reversed(rows)))]
+    assert names2 == names
+
+
+# ---------------------------------------------------------------------------
+# memory observability
+# ---------------------------------------------------------------------------
+def test_stage_memory_sets_gauges_under_telemetry():
+    from repro.obs.memprof import stage_memory
+    reg = obs.MetricsRegistry()
+    obs.enable_telemetry()
+    try:
+        with stage_memory(reg, "stage_a"):
+            blob = bytearray(2_000_000)
+            assert blob is not None
+    finally:
+        obs.enable_telemetry(False)
+    gauges = reg.to_dict()["gauges"]
+    assert gauges["mem.host_peak_bytes.stage_a"] >= 2_000_000
+    assert gauges["mem.device_bytes.stage_a"] >= 0
+
+
+def test_stage_memory_is_a_noop_when_telemetry_off():
+    from repro.obs.memprof import stage_memory
+    reg = obs.MetricsRegistry()
+    with stage_memory(reg, "stage_a"):
+        pass
+    assert reg.to_dict()["gauges"] == {}
+    with stage_memory(None, "stage_a"):       # registry-less: also a no-op
+        pass
+
+
+# ---------------------------------------------------------------------------
+# the stdlib gate + trend tables
+# ---------------------------------------------------------------------------
+def _load_script(name):
+    spec = importlib.util.spec_from_file_location(
+        name, os.path.join(REPO, "results", f"{name}.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_check_bench_requires_manifest_and_repeats():
+    cb = _load_script("check_bench")
+    doc = _explore_doc()
+    doc["bit_identical"] = doc["ii_identical"] = doc["verified"] = True
+    errors = []
+    cb._manifest(doc, "x.json", errors)
+    cb._repeats(doc, "x.json", errors)
+    assert errors == []
+    errors = []
+    cb._manifest({}, "x.json", errors)
+    assert any("missing manifest" in e for e in errors)
+    errors = []
+    cb._manifest(dict(doc, manifest=dict(doc["manifest"], rogue=1)),
+                 "x.json", errors)
+    assert any("unknown manifest key 'rogue'" in e for e in errors)
+    errors = []
+    cb._repeats({"repeats": {"n": 0}}, "x.json", errors)
+    assert any("positive int" in e for e in errors)
+    errors = []
+    cb._repeats({}, "x.json", errors)
+    assert any("missing repeats" in e for e in errors)
+    # the contract mirrors must not drift
+    from repro.obs import manifest as manifest_mod
+    import dataclasses
+    assert cb.MANIFEST_KEYS == {
+        f.name for f in dataclasses.fields(manifest_mod.RunManifest)}
+    assert cb.MANIFEST_SCHEMA == manifest_mod.MANIFEST_SCHEMA
+    assert tuple(cb.XLA_CACHE_STATES) == manifest_mod.XLA_CACHE_STATES
+
+
+def test_check_bench_passes_on_committed_artifacts():
+    out = subprocess.run(
+        [sys.executable, os.path.join(REPO, "results", "check_bench.py")],
+        capture_output=True, text=True, cwd=REPO)
+    assert out.returncode == 0, out.stdout + out.stderr
+
+
+def test_make_tables_trend_and_manifest_skip(tmp_path):
+    mt = _load_script("make_tables")
+    # load() skips manifest header lines (records jsonl)
+    p = str(tmp_path / "rows.jsonl")
+    with open(p, "w") as fh:
+        fh.write(json.dumps({"schema": 2,
+                             "manifest": capture().to_dict()}) + "\n")
+        fh.write(json.dumps({"app": "conv", "x": 1}) + "\n")
+    rows = mt.load(p)
+    assert rows == [{"app": "conv", "x": 1}]
+    # trend table renders committed history when present, or the synthetic
+    d = str(tmp_path / "hist")
+    for i in range(3):
+        history_mod.append(_mk_row(f"s{i}", 1.0 + i, ts=float(i)),
+                           directory=d)
+    table = mt.trend_table(d)
+    assert "### bench_x" in table and "| s0" in table
+    assert "speedup" in table and "serial_s" in table
+    assert mt.trend_table(str(tmp_path / "none")) == "(no history rows yet)"
+
+
+def test_explorer_forget_purges_only_named_stages():
+    from repro.apps import ml_graphs
+    from repro.explore import ExploreConfig, Explorer
+    from repro.core import MiningConfig
+    apps = dict(list(ml_graphs().items())[:2])
+    ex = Explorer(apps, ExploreConfig(
+        mode="per_app",
+        mining=MiningConfig(min_support=3, max_pattern_nodes=4,
+                            time_budget_s=5, max_patterns_per_level=10)))
+    mapped = ex.map()
+    assert ex.forget("pnr") == 0            # nothing pnr'd yet
+    assert ex.forget("map") >= 1            # map entries purged
+    assert ex.forget("map") == 0            # ... and purged only once
+    remapped = ex.map()                     # recomputes cleanly after forget
+    assert sorted(remapped) == sorted(mapped)
