@@ -209,6 +209,25 @@ CHECKS = {
 }
 
 
+def check_failures_block(data: dict, path: str,
+                         errors: List[str]) -> None:
+    """Committed artifacts must come from clean runs: a ``failures``
+    block, when present, must be an empty list — a benchmark measured on
+    a degraded (fault-isolated) run is not a performance contract."""
+    if "failures" not in data:
+        return          # pre-robustness artifacts carry no block
+    block = data["failures"]
+    if not isinstance(block, list):
+        errors.append(f"{path}: failures block is {type(block).__name__}, "
+                      f"expected a list")
+    elif block:
+        stages = sorted({str(f.get("stage", "?")) for f in block
+                         if isinstance(f, dict)})
+        errors.append(f"{path}: artifact produced by a degraded run — "
+                      f"{len(block)} StageFailure row(s) in stages "
+                      f"{stages}; benchmarks must be measured clean")
+
+
 def check_file(path: str, errors: List[str]) -> None:
     with open(path) as f:
         data = json.load(f)
@@ -219,6 +238,7 @@ def check_file(path: str, errors: List[str]) -> None:
                       f"gate rule to results/check_bench.py")
         return
     before = len(errors)
+    check_failures_block(data, path, errors)
     summary = checker(data, path, errors)
     status = "OK " if len(errors) == before else "FAIL"
     print(f"  {status} {path:<40} [{kind}] {summary}")

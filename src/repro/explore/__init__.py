@@ -18,17 +18,29 @@ are individually invokable and memoized by content key; the ``pnr`` stage
 anneals all (variant, app) placements of a bucket signature in one JAX
 dispatch.  ``python -m repro.explore --help`` drives the same pipeline
 from the command line.
+
+Robustness (see README "Robustness & resumption"): pass a
+:class:`DiskStore` as the Explorer's store for crash-safe resumption;
+with ``on_error="isolate"`` (the default) a twice-failing (variant, app)
+pair degrades to a structured :class:`StageFailure` row in
+``ExploreResult.failures`` instead of killing the run.
 """
 
-from .config import CONFIG_SCHEMA, ExploreConfig
+from .config import CONFIG_SCHEMA, ConfigFormatError, ExploreConfig
+from .persist import DiskStore
 from .pipeline import (Explorer, ExploreResult, evaluate_pairs, graph_key,
                        pnr_grouped)
-from .records import (RECORD_SCHEMA, ExploreRecord, from_jsonl,
-                      read_manifest, to_jsonl)
+from .records import (FAILURE_SCHEMA, RECORD_SCHEMA, ExploreRecord,
+                      RecordFormatError, StageFailure, failures_from_jsonl,
+                      from_jsonl, read_manifest, summarize_failures,
+                      to_jsonl)
 
 __all__ = [
-    "CONFIG_SCHEMA", "ExploreConfig", "Explorer", "ExploreResult",
+    "CONFIG_SCHEMA", "ConfigFormatError", "ExploreConfig",
+    "DiskStore",
+    "Explorer", "ExploreResult",
     "evaluate_pairs", "graph_key", "pnr_grouped",
-    "RECORD_SCHEMA", "ExploreRecord", "from_jsonl", "to_jsonl",
-    "read_manifest",
+    "FAILURE_SCHEMA", "RECORD_SCHEMA", "ExploreRecord",
+    "RecordFormatError", "StageFailure", "failures_from_jsonl",
+    "from_jsonl", "to_jsonl", "read_manifest", "summarize_failures",
 ]

@@ -16,6 +16,20 @@ JSON — load it in Perfetto, or summarize with ``python -m
 repro.obs.report``.  ``--metrics PATH`` dumps the explorer's metrics
 registry (memo hits/misses, dispatch counts, bucket histograms) as
 JSON.  Both are off by default and never change computed results.
+
+Robustness flags (see README "Robustness & resumption")::
+
+    --store DIR          crash-safe on-disk memo store; a re-invocation
+                         after a crash resumes from completed stages
+    --on-error MODE      isolate (default): a failing pair degrades to a
+                         structured failure row; raise: fail fast
+    --allow-partial      exit 0 even when pairs degraded
+    --inject-fault SPEC  arm a deterministic fault (site:kind:nth);
+                         repeatable — test/CI harness only
+
+Exit codes: 0 clean run; 1 degraded (StageFailures present, or a
+fail-fast error) — one structured summary line on stderr, never a
+traceback; 2 usage / malformed config or records file.
 """
 
 from __future__ import annotations
@@ -60,7 +74,7 @@ def _config_from_args(args, mode: str) -> ExploreConfig:
                          rank_mode=args.rank_mode, fabric=fabric,
                          per_app_subgraphs=args.per_app_subgraphs,
                          domain_name=args.name, pnr_batch=args.pnr_batch,
-                         sim_batch=args.sim_batch)
+                         sim_batch=args.sim_batch, on_error=args.on_error)
 
 
 def _add_common(sp: argparse.ArgumentParser) -> None:
@@ -92,6 +106,23 @@ def _add_common(sp: argparse.ArgumentParser) -> None:
                     choices=("grouped", "serial"),
                     help="batch-first schedule/simulate stages (grouped) "
                          "or the per-pair loop (serial); bit-identical")
+    sp.add_argument("--on-error", default="isolate",
+                    choices=("isolate", "raise"),
+                    help="isolate: a failing (variant, app) pair degrades "
+                         "to a StageFailure row, groupmates unaffected; "
+                         "raise: fail fast on the first error")
+    sp.add_argument("--store", default=None, metavar="DIR",
+                    help="crash-safe on-disk memo store (atomic writes, "
+                         "checksummed entries); re-invoking with the same "
+                         "DIR resumes from completed stages")
+    sp.add_argument("--allow-partial", action="store_true",
+                    help="exit 0 even when some pairs degraded to "
+                         "StageFailure rows")
+    sp.add_argument("--inject-fault", action="append", default=None,
+                    metavar="SITE:KIND:NTH",
+                    help="arm a deterministic fault (repeatable); kinds: "
+                         "exc | budget | kill | truncate; e.g. "
+                         "pnr:exc:0, store.write:kill:2, schedule:budget:1+")
     sp.add_argument("--out", default=None, help="write records jsonl here")
     sp.add_argument("--dump-config", default=None,
                     help="write the resolved ExploreConfig JSON here")
@@ -134,18 +165,30 @@ def _obs_end(handle, ex):
 
 
 def _run(args, mode: str) -> int:
+    from .. import faultinject
+    from .records import summarize_failures
+
     apps = _suite(args.suite)
     cfg = _config_from_args(args, mode)
     if args.dump_config:
         with open(args.dump_config, "w") as f:
             json.dump(cfg.to_dict(), f, indent=2)
         print(f"config -> {args.dump_config}")
-    ex = Explorer(apps, cfg)
+    store = metrics = None
+    if args.store:
+        from ..obs.metrics import MetricsRegistry
+        from .persist import DiskStore
+        metrics = MetricsRegistry()       # shared so load-time events
+        store = DiskStore(args.store, metrics=metrics)   # land in it too
+    ex = Explorer(apps, cfg, store=store, metrics=metrics)
     obs_handle = _obs_begin(getattr(args, "trace", None),
                             getattr(args, "metrics", None), ex)
     try:
+        for spec in args.inject_fault or ():
+            faultinject.arm(spec)
         res = ex.run()
     finally:
+        faultinject.disarm_all()
         _obs_end(obs_handle, ex)
     print(res.table())
     rows = res.records()
@@ -154,12 +197,38 @@ def _run(args, mode: str) -> int:
         print(f"{len(rows)} records -> {args.out}")
     print(f"# {len(rows)} (variant, app) records in {res.elapsed_s:.1f}s "
           f"[mode={mode}, pnr_batch={cfg.pnr_batch}]")
+    if res.failures:
+        print(f"# DEGRADED: {summarize_failures(res.failures)}",
+              file=sys.stderr)
+        if not args.allow_partial:
+            return 1
     return 0
 
 
 #: every stage the smoke config executes must appear as a span in its trace
 _SMOKE_STAGES = ("mine", "rank", "merge", "map", "pnr", "schedule",
                  "simulate")
+
+
+def _smoke_case():
+    """The paper's Fig. 3 convolution on a 4x4 fabric — the shared
+    (apps, config) case every self-check smoke runs."""
+    from ..core.mining import MiningConfig
+    from ..fabric import FabricOptions, FabricSpec
+    from ..graphir import trace_scalar
+
+    def conv4(i0, i1, i2, i3, w0, w1, w2, w3, c):
+        return (((i0 * w0) + (i1 * w1)) + (i2 * w2)) + (i3 * w3) + c
+
+    apps = {"conv": trace_scalar(
+        conv4, ["i0", "i1", "i2", "i3", "w0", "w1", "w2", "w3", "c"])}
+    cfg = ExploreConfig(
+        mode="per_app",
+        mining=MiningConfig(min_support=2, max_pattern_nodes=5),
+        max_merge=2,
+        fabric=FabricOptions(spec=FabricSpec(rows=4, cols=4),
+                             chains=2, sweeps=4, simulate=True))
+    return apps, cfg
 
 
 def smoke(trace=None, metrics_path=None) -> int:
@@ -176,22 +245,9 @@ def smoke(trace=None, metrics_path=None) -> int:
     from dataclasses import replace
     import tempfile
 
-    from ..core.mining import MiningConfig
-    from ..fabric import FabricOptions, FabricSpec
-    from ..graphir import trace_scalar
     from .records import from_jsonl
 
-    def conv4(i0, i1, i2, i3, w0, w1, w2, w3, c):
-        return (((i0 * w0) + (i1 * w1)) + (i2 * w2)) + (i3 * w3) + c
-
-    apps = {"conv": trace_scalar(
-        conv4, ["i0", "i1", "i2", "i3", "w0", "w1", "w2", "w3", "c"])}
-    cfg = ExploreConfig(
-        mode="per_app",
-        mining=MiningConfig(min_support=2, max_pattern_nodes=5),
-        max_merge=2,
-        fabric=FabricOptions(spec=FabricSpec(rows=4, cols=4),
-                             chains=2, sweeps=4, simulate=True))
+    apps, cfg = _smoke_case()
     ex = Explorer(apps, cfg)
     obs_handle = _obs_begin(trace, metrics_path, ex)
     try:
@@ -239,11 +295,147 @@ def smoke(trace=None, metrics_path=None) -> int:
     return 0
 
 
+def faults_smoke() -> int:
+    """Fault-injection matrix (the tier-1 CI robustness job).
+
+    One injected fault per pipeline stage, twice over:
+
+    * transient (first attempt only) — the stage's serial retry must
+      absorb it; the run stays clean and produces the full record set;
+    * persistent (first attempt AND the ``.retry`` site) — the pair
+      degrades to a structured :class:`StageFailure` row while every
+      *untouched* pair's record stays bit-identical to a clean
+      baseline (the pow2-bucket independence invariant).
+
+    Plus a budget-exhaustion leg: an impossible scheduler II budget must
+    surface as ``BudgetExceeded`` failure rows — degraded, never a hang.
+    """
+    from dataclasses import replace
+
+    from .. import faultinject
+    from ..errors import BudgetExceeded           # noqa: F401 (doc link)
+    from .records import summarize_failures
+
+    apps, cfg = _smoke_case()
+    base = Explorer(apps, cfg).run()
+    base_rows = {(r.pe_name, r.app): r.to_dict() for r in base.records()}
+    assert base.clean and base_rows, "baseline run must be clean"
+
+    for stage in _SMOKE_STAGES:
+        faultinject.disarm_all()
+        faultinject.arm(f"{stage}:exc:0")
+        res = Explorer(apps, cfg).run()
+        faultinject.disarm_all()
+        assert res.clean, (f"{stage}: transient fault not absorbed by "
+                           f"retry: {[f.to_dict() for f in res.failures]}")
+        assert {(r.pe_name, r.app) for r in res.records()} \
+            == set(base_rows), f"{stage}: transient fault lost records"
+
+        faultinject.arm(f"{stage}:exc:0")
+        faultinject.arm(f"{stage}.retry:exc:0")
+        res = Explorer(apps, cfg).run()
+        faultinject.disarm_all()
+        assert res.failures, f"{stage}: persistent fault left run clean"
+        assert all(f.stage == stage for f in res.failures), \
+            f"{stage}: failure rows name wrong stage: {res.failures}"
+        assert all(f.retried for f in res.failures), \
+            f"{stage}: failure rows not marked retried"
+        hit = {(f.pe_name, f.app) for f in res.failures}
+        for r in res.records():
+            k = (r.pe_name, r.app)
+            if k in hit:      # the degraded pair keeps upstream columns
+                continue
+            assert r.to_dict() == base_rows[k], \
+                f"{stage}: untouched pair {k} diverged from baseline"
+        print(f"# {stage:<9} transient->retried clean; persistent->"
+              f"{summarize_failures(res.failures)}")
+
+    # budgets: an impossible cap degrades, never hangs — on both the
+    # grouped dispatch AND its serial retry (the budget is content, not
+    # a property of which batch path ran)
+    for knob, stage in ((dict(anneal_max_states=1), "pnr"),
+                        (dict(sim_max_cycles=1), "simulate")):
+        cfg_b = cfg.replace(fabric=replace(cfg.fabric, **knob))
+        res = Explorer(apps, cfg_b).run()
+        assert res.failures, f"{knob}: exhausted budget left run clean"
+        assert all(f.stage == stage for f in res.failures)
+        assert all(f.error_type == "BudgetExceeded" for f in res.failures), \
+            f"budget failures mistyped: {[f.to_dict() for f in res.failures]}"
+        assert all(f.budget for f in res.failures), \
+            "BudgetExceeded rows carry no budget state"
+        print(f"# budget    {knob} -> {summarize_failures(res.failures)}")
+    print("# explore faults-smoke OK: every stage degrades, none die")
+    return 0
+
+
+def resume_smoke() -> int:
+    """Kill-resume self check (the tier-1 CI crash-safety job).
+
+    Invokes this CLI in a subprocess with ``--store`` and an armed
+    ``store.write:kill:N`` fault — the process SIGKILLs itself mid-run,
+    mid-store-write.  A re-invocation against the same store directory
+    must resume from the completed stages and produce records
+    bit-identical to a crash-free run (manifest header excluded: it
+    captures wall-clock environment).
+    """
+    import subprocess
+    import tempfile
+
+    def cli(extra, check=True):
+        cmd = [sys.executable, "-m", "repro.explore", "per-app",
+               "--suite", "camera", "--simulate", "--rows", "6",
+               "--cols", "6", "--chains", "2", "--sweeps", "4",
+               "--min-support", "2", "--max-pattern-nodes", "5"] + extra
+        p = subprocess.run(cmd, capture_output=True, text=True,
+                           timeout=600)
+        if check and p.returncode != 0:
+            raise AssertionError(
+                f"{cmd} -> rc={p.returncode}\n{p.stdout}\n{p.stderr}")
+        return p
+
+    def records_of(path):
+        with open(path) as f:
+            return [ln for ln in f.read().splitlines()[1:] if ln]
+
+    with tempfile.TemporaryDirectory() as tmp:
+        clean_out = f"{tmp}/clean.jsonl"
+        cli(["--out", clean_out])
+        want = records_of(clean_out)
+        assert want, "crash-free run produced no records"
+
+        store = f"{tmp}/store"
+        p = cli(["--store", store, "--inject-fault", "store.write:kill:3"],
+                check=False)
+        assert p.returncode != 0, "injected SIGKILL did not kill the run"
+        import os as _os
+        n_entries = len([f for f in _os.listdir(store)
+                         if f.endswith(".entry")])
+        assert n_entries >= 3, \
+            f"killed run persisted only {n_entries} entries"
+
+        resumed_out = f"{tmp}/resumed.jsonl"
+        p = cli(["--store", store, "--out", resumed_out])
+        got = records_of(resumed_out)
+        assert got == want, (
+            "resumed records diverge from crash-free run:\n"
+            + "\n".join(ln for ln in got if ln not in want))
+    print(f"# explore resume-smoke OK: killed mid-write after "
+          f"{n_entries} persisted entries, resumed bit-identical "
+          f"({len(want)} records)")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="python -m repro.explore",
                                  description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="fast end-to-end self check")
+    ap.add_argument("--faults-smoke", action="store_true",
+                    help="fault-injection matrix: one injected fault per "
+                         "stage, asserting degraded-not-dead")
+    ap.add_argument("--resume-smoke", action="store_true",
+                    help="kill -9 a run mid-store-write, resume from the "
+                         "on-disk store, assert bit-identical records")
     ap.add_argument("--trace", nargs="?", const="out.trace.json",
                     default=None, metavar="PATH",
                     help="record a pipeline trace and write Chrome "
@@ -255,12 +447,27 @@ def main(argv=None) -> int:
     for cmd in ("per-app", "domain"):
         _add_common(sub.add_parser(cmd))
     args = ap.parse_args(argv)
-    if args.smoke:
-        return smoke(args.trace, args.metrics)
-    if args.cmd is None:
-        ap.print_help()
+    from .config import ConfigFormatError
+    from .records import RecordFormatError
+    try:
+        if args.smoke:
+            return smoke(args.trace, args.metrics)
+        if args.faults_smoke:
+            return faults_smoke()
+        if args.resume_smoke:
+            return resume_smoke()
+        if args.cmd is None:
+            ap.print_help()
+            return 2
+        return _run(args, "per_app" if args.cmd == "per-app" else "domain")
+    except (ConfigFormatError, RecordFormatError) as e:
+        print(f"error: {e}", file=sys.stderr)
         return 2
-    return _run(args, "per_app" if args.cmd == "per-app" else "domain")
+    except (ValueError, RuntimeError, OSError) as e:
+        # --on-error raise (fail fast) and malformed CLI inputs land
+        # here: one structured line, never an unhandled traceback
+        print(f"error: {type(e).__name__}: {e}", file=sys.stderr)
+        return 1
 
 
 if __name__ == "__main__":

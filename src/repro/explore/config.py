@@ -26,11 +26,18 @@ from ..fabric.options import FabricOptions
 #: bump when a field is added/renamed/retyped; from_dict rejects unknown
 #: versions so stale blobs fail loudly instead of silently defaulting
 #: (2: added sim_batch — batch-first schedule/simulate stages)
-CONFIG_SCHEMA = 2
+#: (3: added on_error — per-pair fault isolation policy)
+CONFIG_SCHEMA = 3
 
 MODES = ("per_app", "domain")
 PNR_BATCH_MODES = ("grouped", "serial")
 SIM_BATCH_MODES = ("grouped", "serial")
+ON_ERROR_MODES = ("isolate", "raise")
+
+
+class ConfigFormatError(ValueError):
+    """An ExploreConfig blob that can't be parsed — reported as a
+    one-line error by the CLI, never a stack trace."""
 
 
 @dataclass(frozen=True)
@@ -64,6 +71,13 @@ class ExploreConfig:
                         simulated outputs.  (Distinct from
                         ``FabricOptions.sim_batch``, the *input batch
                         size* fed to each simulation.)
+    on_error          — "isolate": a failing (variant, app) pair falls
+                        out of its batch group, is retried once on the
+                        serial path, and on second failure becomes a
+                        structured StageFailure row while groupmates
+                        complete (the pow2-bucket independence invariant
+                        makes this safe); "raise": legacy behavior, the
+                        first failure propagates and kills the run.
     """
 
     mode: str = "per_app"
@@ -76,8 +90,12 @@ class ExploreConfig:
     fabric: Optional[FabricOptions] = None
     pnr_batch: str = "grouped"
     sim_batch: str = "grouped"
+    on_error: str = "isolate"
 
     def __post_init__(self) -> None:
+        if self.on_error not in ON_ERROR_MODES:
+            raise ValueError(f"on_error must be one of {ON_ERROR_MODES}, "
+                             f"got {self.on_error!r}")
         if self.mode not in MODES:
             raise ValueError(f"mode must be one of {MODES}, got {self.mode!r}")
         if self.pnr_batch not in PNR_BATCH_MODES:
@@ -108,18 +126,51 @@ class ExploreConfig:
 
     @staticmethod
     def from_dict(d: Dict[str, Any]) -> "ExploreConfig":
+        if not isinstance(d, dict):
+            raise ConfigFormatError(
+                f"ExploreConfig blob must be an object, got "
+                f"{type(d).__name__}")
         d = dict(d)
         schema = d.pop("schema", CONFIG_SCHEMA)
         if schema != CONFIG_SCHEMA:
-            raise ValueError(f"ExploreConfig schema {schema} not supported "
-                             f"(this build reads schema {CONFIG_SCHEMA})")
+            raise ConfigFormatError(
+                f"ExploreConfig schema {schema!r} not supported (this build "
+                f"reads schema {CONFIG_SCHEMA}) — regenerate the blob with "
+                f"ExploreConfig.to_dict() from a matching build")
         known = {f.name for f in fields(ExploreConfig)}
         unknown = set(d) - known
         if unknown:
-            raise ValueError(f"unknown ExploreConfig fields {sorted(unknown)}")
+            raise ConfigFormatError(
+                f"unknown ExploreConfig fields {sorted(unknown)} — "
+                f"known fields are {sorted(known)}")
+        for name, want in (("mode", str), ("max_merge", int),
+                           ("rank_mode", str), ("validate", bool),
+                           ("per_app_subgraphs", int), ("domain_name", str),
+                           ("pnr_batch", str), ("sim_batch", str),
+                           ("on_error", str)):
+            if name in d and (not isinstance(d[name], want)
+                              or (want is int and isinstance(d[name], bool))):
+                raise ConfigFormatError(
+                    f"ExploreConfig field {name!r} must be "
+                    f"{want.__name__}, got {type(d[name]).__name__} "
+                    f"({d[name]!r})")
         mining = d.pop("mining", None)
         fabric = d.pop("fabric", None)
-        return ExploreConfig(
-            mining=MiningConfig(**mining) if mining else MiningConfig(),
-            fabric=None if fabric is None else FabricOptions.from_dict(fabric),
-            **d)
+        if mining is not None and not isinstance(mining, dict):
+            raise ConfigFormatError(
+                f"ExploreConfig field 'mining' must be an object, got "
+                f"{type(mining).__name__}")
+        if fabric is not None and not isinstance(fabric, dict):
+            raise ConfigFormatError(
+                f"ExploreConfig field 'fabric' must be an object or null, "
+                f"got {type(fabric).__name__}")
+        try:
+            return ExploreConfig(
+                mining=MiningConfig(**mining) if mining else MiningConfig(),
+                fabric=(None if fabric is None
+                        else FabricOptions.from_dict(fabric)),
+                **d)
+        except (TypeError, ValueError) as e:
+            if isinstance(e, ConfigFormatError):
+                raise
+            raise ConfigFormatError(f"bad ExploreConfig blob: {e}")

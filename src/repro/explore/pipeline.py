@@ -45,6 +45,7 @@ from collections import Counter, defaultdict
 from dataclasses import dataclass, replace as _dc_replace
 from typing import Any, Callable, Dict, List, Optional, Tuple, TYPE_CHECKING
 
+from .. import faultinject
 from ..core.costmodel import AppCost, attach_sim, evaluate_mapping
 from ..core.dse import (DSEResult, PEVariant, _dedup_keep_maximal, app_ops,
                         build_variants)
@@ -52,18 +53,23 @@ from ..core.mapper import Mapping, map_application
 from ..core.merge import add_pattern, baseline_datapath, is_pe_pattern
 from ..core.mining import MinedSubgraph, mine_frequent_subgraphs
 from ..core.mis import rank_by_mis
+from ..errors import BudgetExceeded
 from ..graphir.graph import Graph
 from ..obs import event as obs_event, span
 from ..obs.memprof import stage_memory
 from ..obs.metrics import CounterView, MetricsRegistry
 from .config import ExploreConfig
-from .records import ExploreRecord
+from .records import ExploreRecord, StageFailure
 
 if TYPE_CHECKING:                              # runtime import stays lazy
     from ..fabric import PnRResult
     from ..fabric.options import FabricOptions
 
 Pair = Tuple[str, str]                         # (pe_name, app_name)
+
+#: sentinel for a unit of work that failed twice (batch + serial retry)
+#: in isolate mode — never stored in the memo, never a real stage value
+_FAILED = object()
 
 
 # ---------------------------------------------------------------------------
@@ -96,12 +102,16 @@ def _pnr_fields(options: "FabricOptions", pnr_batch: str) -> Tuple:
                                        s.hop_delay_ns, s.latch_depth)
     return (spec_sig, options.backend, options.hpwl_backend,
             options.score_mode, options.chains, options.sweeps,
-            options.seed, pnr_batch)
+            options.seed, pnr_batch, options.anneal_max_states)
+
+
+def _sched_fields(options: "FabricOptions") -> Tuple:
+    return (options.sched_max_ii, options.sched_budget_factor)
 
 
 def _sim_fields(options: "FabricOptions") -> Tuple:
     return (options.sim_iterations, options.sim_batch, options.sim_backend,
-            options.sim_verify, options.seed)
+            options.sim_verify, options.seed, options.sim_max_cycles)
 
 
 def _pair_nonce(pe_name: str, app_name: str) -> int:
@@ -120,12 +130,14 @@ def _pnr_pair(pe_name, dp, mapping, app, options) -> "PnRResult":
                            sweeps=options.sweeps, seed=options.seed,
                            pe_name=pe_name,
                            hpwl_backend=options.hpwl_backend,
-                           score_mode=options.score_mode)
+                           score_mode=options.score_mode,
+                           max_states=options.anneal_max_states)
 
 
 def pnr_grouped(items: List[Tuple[str, Any, Mapping, Graph, int]],
                 options: "FabricOptions",
-                stats: Optional[Counter] = None) -> List["PnRResult"]:
+                stats: Optional[Counter] = None,
+                isolate: bool = False) -> List["PnRResult"]:
     """Place-and-route many (variant, app) pairs, annealing each bucket-
     compatible group in ONE JAX dispatch.
 
@@ -133,62 +145,96 @@ def pnr_grouped(items: List[Tuple[str, Any, Mapping, Graph, int]],
     seeds the pair's chains so its placement is reproducible regardless of
     which pairs share its dispatch.  Routing and costing stay per-pair
     (they are cheap Python); only the annealing hot loop is batched.
+
+    ``isolate=True``: a failing pair (fault-injection site ``pnr``, an
+    over-budget anneal, a lowering/routing error) yields the Exception
+    object at its index instead of killing the batch.  Content-nonce
+    seeding makes every surviving pair's placement bit-identical however
+    the failed pair reshapes its dispatch group.
     """
     from ..fabric import PnRResult
     from ..fabric.arch import Coord, FabricSpec
     from ..fabric.cost import evaluate_fabric
     from ..fabric.netlist import extract_netlist
     from ..fabric.place import (Placement, anneal_jax_batch,
-                                batch_signature, lower)
+                                batch_signature, check_anneal_budget, lower)
     from ..fabric.route import route_nets
     import numpy as np
 
+    registry = getattr(stats, "registry", None)
     spec0 = options.spec or FabricSpec()
-    lowered = []
-    for pe_name, dp, mapping, app, nonce in items:
-        netlist = extract_netlist(mapping, app, spec0)
-        spec = spec0.fit(len(netlist.pe_cells), len(netlist.io_cells))
-        lowered.append((netlist, spec, lower(netlist, spec)))
+    lowered: List[Optional[Tuple]] = []
+    errors: Dict[int, Exception] = {}
+    for i, (pe_name, dp, mapping, app, nonce) in enumerate(items):
+        try:
+            faultinject.fire("pnr", pe=pe_name, app=mapping.app_name)
+            netlist = extract_netlist(mapping, app, spec0)
+            spec = spec0.fit(len(netlist.pe_cells), len(netlist.io_cells))
+            prob = lower(netlist, spec)
+            check_anneal_budget(prob, options.chains, options.sweeps,
+                                options.anneal_max_states, metrics=registry)
+            lowered.append((netlist, spec, prob))
+        except Exception as e:
+            if not isolate:
+                raise
+            lowered.append(None)
+            errors[i] = e
 
     groups: Dict[Tuple, List[int]] = defaultdict(list)
-    for i, (_, _, prob) in enumerate(lowered):
-        groups[batch_signature(prob, options.sweeps)].append(i)
+    for i, low in enumerate(lowered):
+        if low is not None:
+            groups[batch_signature(low[2], options.sweeps)].append(i)
 
-    registry = getattr(stats, "registry", None)
     annealed: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
     for sig, idxs in groups.items():
-        with span("pnr.dispatch", bucket="x".join(map(str, sig)),
-                  pairs=len(idxs)):
-            out = anneal_jax_batch([lowered[i][2] for i in idxs],
-                                   chains=options.chains, seed=options.seed,
-                                   sweeps=options.sweeps,
-                                   score_mode=options.score_mode,
-                                   nonces=[items[i][4] for i in idxs],
-                                   metrics=registry)
+        try:
+            with span("pnr.dispatch", bucket="x".join(map(str, sig)),
+                      pairs=len(idxs)):
+                out = anneal_jax_batch([lowered[i][2] for i in idxs],
+                                       chains=options.chains,
+                                       seed=options.seed,
+                                       sweeps=options.sweeps,
+                                       score_mode=options.score_mode,
+                                       nonces=[items[i][4] for i in idxs],
+                                       metrics=registry)
+        except Exception as e:
+            if not isolate:
+                raise
+            for i in idxs:       # whole-dispatch failure: every rider
+                errors[i] = e    # retries on the serial path
+            continue
         annealed.update(zip(idxs, out))
         if registry is not None:
             registry.observe("pnr.bucket_size", len(idxs))
         if stats is not None:
             stats["pnr_dispatch"] += 1
 
-    results = []
+    results: List = []
     for i, (pe_name, dp, mapping, app, _) in enumerate(items):
+        if i in errors:
+            results.append(errors[i])
+            continue
         netlist, spec, prob = lowered[i]
         slots, costs = annealed[i]
-        best = int(np.argmin(costs))
-        coords: Dict[str, Coord] = {}
-        for idx, name in enumerate(prob.cell_names):
-            x, y = prob.slot_xy[slots[best][prob.entity_of(idx)]]
-            coords[name] = (int(x), int(y))
-        with span("pnr.pair", pe=pe_name, app=mapping.app_name):
-            placement = Placement(coords=coords, cost=float(costs[best]),
-                                  backend="jax", chains=options.chains,
-                                  sweeps=options.sweeps,
-                                  chain_costs=[float(c) for c in costs])
-            routes = route_nets(netlist, placement, spec)
-            fc = evaluate_fabric(dp, mapping, netlist, placement, routes,
-                                 spec, pe_name=pe_name)
-        results.append(PnRResult(spec, netlist, placement, routes, fc))
+        try:
+            best = int(np.argmin(costs))
+            coords: Dict[str, Coord] = {}
+            for idx, name in enumerate(prob.cell_names):
+                x, y = prob.slot_xy[slots[best][prob.entity_of(idx)]]
+                coords[name] = (int(x), int(y))
+            with span("pnr.pair", pe=pe_name, app=mapping.app_name):
+                placement = Placement(coords=coords, cost=float(costs[best]),
+                                      backend="jax", chains=options.chains,
+                                      sweeps=options.sweeps,
+                                      chain_costs=[float(c) for c in costs])
+                routes = route_nets(netlist, placement, spec)
+                fc = evaluate_fabric(dp, mapping, netlist, placement, routes,
+                                     spec, pe_name=pe_name)
+            results.append(PnRResult(spec, netlist, placement, routes, fc))
+        except Exception as e:
+            if not isolate:
+                raise
+            results.append(e)
     return results
 
 
@@ -201,6 +247,8 @@ def _verify_prog(prog, app: Graph, label: str, options, nonce: int) -> int:
     if not options.sim_verify:
         return -1
     from ..sim import check_against_interp, random_inputs
+    from ..sim.cycle import check_cycle_budget
+    check_cycle_budget(prog, options.sim_iterations, options.sim_max_cycles)
     inputs = random_inputs(prog, options.sim_iterations, options.sim_batch,
                            seed=options.input_seed(nonce))
     _, err, exact = check_against_interp(prog, app, inputs,
@@ -218,7 +266,9 @@ def _require_exact(err: float, exact: bool, label: str) -> int:
 def _sim_pair(dp, mapping, app, pnr, options, nonce: int) -> Tuple[Any, int]:
     """(SimProgram, verified) for one placed-and-routed pair."""
     from ..sim import build_sim
-    prog, _ = build_sim(dp, mapping, app, pnr=pnr)
+    prog, _ = build_sim(dp, mapping, app, pnr=pnr,
+                        max_ii=options.sched_max_ii,
+                        budget_factor=options.sched_budget_factor)
     return prog, _verify_prog(prog, app, mapping.app_name, options, nonce)
 
 
@@ -277,6 +327,12 @@ class ExploreResult:
     elapsed_s: float
     sim_buckets: Dict[Pair, str] = None   # provenance per simulated pair
     metrics: Dict[str, Any] = None        # registry snapshot at run end
+    failures: List[StageFailure] = None   # degraded pairs/apps (isolate
+    # mode: each failed its batch group AND the serial retry)
+
+    @property
+    def clean(self) -> bool:
+        return not self.failures
 
     def records(self) -> List[ExploreRecord]:
         buckets = self.sim_buckets or {}
@@ -295,7 +351,8 @@ class ExploreResult:
 
     def to_jsonl(self, path: str) -> int:
         from .records import to_jsonl
-        return to_jsonl(self.records(), path)
+        return to_jsonl(self.records(), path,
+                        failures=self.failures or ())
 
     def table(self) -> str:
         return "\n".join(r.row() for res in self.results.values()
@@ -340,6 +397,14 @@ class Explorer:
             for k, v in stats.items():       # seed from a legacy Counter
                 self.stats[k] += v
         self._app_keys = {name: graph_key(g) for name, g in apps.items()}
+        self.failures: List[StageFailure] = []
+        # memo keys that degraded to a StageFailure this run: stages
+        # re-invoke their upstreams freely (schedule -> pnr -> map), so
+        # without this a failed unit would be silently re-attempted
+        # mid-run and the stage views would disagree about which pairs
+        # exist.  Per-run only — never persisted, so a later run (or a
+        # crash-resume against the same DiskStore) recomputes failures.
+        self._failed: set = set()
 
     def with_config(self, **changes: Any) -> "Explorer":
         """New Explorer over a changed config, sharing the memo store."""
@@ -371,17 +436,84 @@ class Explorer:
             self.metrics.inc(f"memo.hit.{stage}")
         return self._store[key]
 
+    # -- per-unit fault isolation ------------------------------------------
+    def _isolating(self) -> bool:
+        return self.config.on_error == "isolate"
+
+    def _record_failure(self, stage: str, exc: BaseException, *,
+                        pe: str = "", app: str = "",
+                        retried: bool = False) -> StageFailure:
+        f = StageFailure.from_exception(stage, exc, pe_name=pe, app=app,
+                                        retried=retried)
+        self.failures.append(f)
+        self.metrics.inc(f"failures.{stage}")
+        if isinstance(exc, BudgetExceeded):
+            self.metrics.inc(f"budget_exhausted.{stage}")
+        obs_event("stage.failure", stage=stage, pe=pe, app=app,
+                  error=f.error_type)
+        return f
+
+    def _retry(self, stage: str, thunk: Callable[[], Any], *,
+               pe: str = "", app: str = "") -> Any:
+        """Serial retry after a first failure; second failure becomes a
+        StageFailure row and the :data:`_FAILED` sentinel."""
+        self.metrics.inc(f"isolate.retry.{stage}")
+        try:
+            faultinject.fire(f"{stage}.retry", pe=pe, app=app)
+            return thunk()
+        except Exception as e:
+            self._record_failure(stage, e, pe=pe, app=app, retried=True)
+            return _FAILED
+
+    def _attempt(self, stage: str, thunk: Callable[[], Any], *,
+                 pe: str = "", app: str = "") -> Any:
+        """One unit of per-pair/per-app work: fire the stage's fault site,
+        run; on failure (isolate mode) retry once, then degrade to a
+        StageFailure + sentinel.  In ``on_error="raise"`` mode the first
+        failure propagates (the legacy behavior)."""
+        try:
+            faultinject.fire(stage, pe=pe, app=app)
+            return thunk()
+        except Exception:
+            if not self._isolating():
+                raise
+            return self._retry(stage, thunk, pe=pe, app=app)
+
+    def _memo_iso(self, key: Tuple, stage: str, thunk: Callable[[], Any],
+                  *, pe: str = "", app: str = "", **attrs: Any) -> Any:
+        """:meth:`_memo` with fault isolation: a unit that fails twice is
+        recorded and returns :data:`_FAILED` instead of raising; failures
+        are never memoized, so a later run recomputes them."""
+        if key in self._failed:              # degraded earlier this run
+            return _FAILED
+        if key in self._store:
+            self.metrics.inc(f"memo.hit.{stage}")
+            return self._store[key]
+        self.metrics.inc(f"memo.miss.{stage}")
+        with span(f"{stage}.work", **attrs):
+            val = self._attempt(stage, thunk, pe=pe, app=app)
+        if val is _FAILED:
+            self._failed.add(key)
+            return _FAILED
+        self._store[key] = val
+        self.stats[stage] += 1
+        return val
+
     # -- stages ------------------------------------------------------------
     def mine(self) -> Dict[str, List[MinedSubgraph]]:
+        """Mined subgraphs per app; a twice-failing app becomes a
+        StageFailure and drops out of the run (isolate mode)."""
         cfg = self.config
         out = {}
         with span("mine"), stage_memory(self.metrics, "mine"):
             for name, app in self.apps.items():
                 key = ("mine", self._app_keys[name], _mining_fields(cfg))
-                out[name] = self._memo(
+                v = self._memo_iso(
                     key, "mine",
                     lambda a=app: mine_frequent_subgraphs(a, cfg.mining),
                     app=name)
+                if v is not _FAILED:
+                    out[name] = v
         return out
 
     def rank(self) -> Dict[str, List[MinedSubgraph]]:
@@ -389,12 +521,16 @@ class Explorer:
         out = {}
         with span("rank"), stage_memory(self.metrics, "rank"):
             for name in self.apps:
+                if name not in mined:        # failed upstream
+                    continue
                 key = ("rank", self._app_keys[name],
                        _mining_fields(self.config))
-                out[name] = self._memo(
+                v = self._memo_iso(
                     key, "rank", lambda n=name: rank_by_mis(
                         [m for m in mined[n] if is_pe_pattern(m.pattern)]),
                     app=name)
+                if v is not _FAILED:
+                    out[name] = v
         return out
 
     def _merge_key(self, name: Optional[str] = None) -> Tuple:
@@ -416,18 +552,27 @@ class Explorer:
         cfg = self.config
         with span("merge"), stage_memory(self.metrics, "merge"):
             if cfg.mode == "per_app":
-                return {name: self._memo(
-                            self._merge_key(name), "merge",
-                            lambda n=name: build_variants(
-                                n, self.apps[n], ranked[n],
-                                max_merge=cfg.max_merge,
-                                rank_mode=cfg.rank_mode,
-                                validate=cfg.validate),
-                            app=name)
-                        for name in self.apps}
-            variant = self._memo(self._merge_key(), "merge",
-                                 lambda: self._build_domain_variant(ranked),
-                                 domain=cfg.domain_name)
+                out = {}
+                for name in self.apps:
+                    if name not in ranked:   # failed upstream
+                        continue
+                    v = self._memo_iso(
+                        self._merge_key(name), "merge",
+                        lambda n=name: build_variants(
+                            n, self.apps[n], ranked[n],
+                            max_merge=cfg.max_merge,
+                            rank_mode=cfg.rank_mode,
+                            validate=cfg.validate),
+                        app=name)
+                    if v is not _FAILED:
+                        out[name] = v
+                return out
+            variant = self._memo_iso(
+                self._merge_key(), "merge",
+                lambda: self._build_domain_variant(ranked),
+                pe=cfg.domain_name, domain=cfg.domain_name)
+        if variant is _FAILED:               # the whole domain degraded
+            return {cfg.domain_name: []}
         return {cfg.domain_name: [variant]}
 
     def _build_domain_variant(self, ranked) -> PEVariant:
@@ -462,6 +607,8 @@ class Explorer:
         out = []
         if cfg.mode == "per_app":
             for name in self.apps:
+                if name not in variants:     # failed upstream
+                    continue
                 mk = self._merge_key(name)
                 for v in variants[name]:
                     out.append((v, name, ("map", mk, v.name,
@@ -478,10 +625,12 @@ class Explorer:
         out = {}
         with span("map"), stage_memory(self.metrics, "map"):
             for v, app_name, key in self._pairs():
-                out[(v.name, app_name)] = self._memo(
+                m = self._memo_iso(
                     key, "map", lambda v=v, a=app_name: map_application(
                         v.datapath, self.apps[a], a),
                     pe=v.name, app=app_name)
+                if m is not _FAILED:
+                    out[(v.name, app_name)] = m
         return out
 
     def _cost(self, v: PEVariant, app_name: str, map_key: Tuple) -> AppCost:
@@ -509,7 +658,11 @@ class Explorer:
         keys: Dict[Pair, Tuple] = {}
         misses = []
         for v, app_name, map_key in self._pairs():
+            if (v.name, app_name) not in mappings:   # failed upstream
+                continue
             key = ("pnr", map_key[1:], sig)
+            if key in self._failed:          # degraded earlier this run
+                continue
             keys[(v.name, app_name)] = key
             if key not in self._store:
                 misses.append((v, app_name, key))
@@ -525,19 +678,39 @@ class Explorer:
                 items = [(v.name, v.datapath, mappings[(v.name, a)],
                           self.apps[a], zlib.crc32(repr(key).encode()))
                          for v, a, key in misses]
-                pnrs = pnr_grouped(items, options, self.stats)
+                pnrs = pnr_grouped(items, options, self.stats,
+                                   isolate=self._isolating())
                 for (v, a, key), pnr in zip(misses, pnrs):
+                    if isinstance(pnr, Exception):
+                        # fell out of its batch group: one serial retry,
+                        # then a StageFailure row — groupmates unaffected
+                        pnr = self._retry(
+                            "pnr", lambda v=v, a=a: _pnr_pair(
+                                v.name, v.datapath, mappings[(v.name, a)],
+                                self.apps[a], options),
+                            pe=v.name, app=a)
+                        if pnr is _FAILED:
+                            self._failed.add(key)
+                            continue
+                        self.stats["pnr_dispatch"] += 1
                     self._store[key] = pnr
                     self.stats["pnr"] += 1
             elif misses:
                 for v, a, key in misses:
                     with span("pnr.pair", pe=v.name, app=a):
-                        self._store[key] = _pnr_pair(v.name, v.datapath,
-                                                     mappings[(v.name, a)],
-                                                     self.apps[a], options)
+                        pnr = self._attempt(
+                            "pnr", lambda v=v, a=a: _pnr_pair(
+                                v.name, v.datapath, mappings[(v.name, a)],
+                                self.apps[a], options),
+                            pe=v.name, app=a)
+                    if pnr is _FAILED:
+                        self._failed.add(key)
+                        continue
+                    self._store[key] = pnr
                     self.stats["pnr"] += 1
                     self.stats["pnr_dispatch"] += 1
-        return {pair: self._store[key] for pair, key in keys.items()}
+        return {pair: self._store[key] for pair, key in keys.items()
+                if key in self._store}
 
     def schedule(self) -> Dict[Pair, Any]:
         """Modulo-scheduled SimProgram per pair — batch-first.
@@ -550,16 +723,28 @@ class Explorer:
         """
         from ..sim import build_sim, build_sim_batch
         cfg = self.config
-        if cfg.fabric is None:
+        options = cfg.fabric
+        if options is None:
             raise ValueError("schedule stage requires config.fabric")
         mappings = self.map()
         pnrs = self.pnr()
-        sig = _pnr_fields(cfg.fabric, cfg.pnr_batch)
+        sig = _pnr_fields(options, cfg.pnr_batch)
+
+        def serial_sched(v, a):
+            return build_sim(v.datapath, mappings[(v.name, a)],
+                             self.apps[a], pnr=pnrs[(v.name, a)],
+                             max_ii=options.sched_max_ii,
+                             budget_factor=options.sched_budget_factor)[0]
 
         keys: Dict[Pair, Tuple] = {}
         misses = []
         for v, app_name, map_key in self._pairs():
-            key = ("sched", map_key[1:], sig, cfg.sim_batch)
+            if (v.name, app_name) not in pnrs:       # failed upstream
+                continue
+            key = ("sched", map_key[1:], sig, cfg.sim_batch,
+                   _sched_fields(options))
+            if key in self._failed:          # degraded earlier this run
+                continue
             keys[(v.name, app_name)] = key
             if key not in self._store:
                 misses.append((v, app_name, key))
@@ -572,19 +757,37 @@ class Explorer:
             if misses and cfg.sim_batch == "grouped":
                 items = [(v.datapath, mappings[(v.name, a)], self.apps[a],
                           pnrs[(v.name, a)]) for v, a, key in misses]
-                progs = build_sim_batch(items, stats=self.stats)
+                progs = build_sim_batch(
+                    items, stats=self.stats,
+                    max_ii=options.sched_max_ii,
+                    budget_factor=options.sched_budget_factor,
+                    isolate=self._isolating())
                 for (v, a, key), prog in zip(misses, progs):
+                    if isinstance(prog, Exception):
+                        prog = self._retry("schedule",
+                                           lambda v=v, a=a: serial_sched(
+                                               v, a),
+                                           pe=v.name, app=a)
+                        if prog is _FAILED:
+                            self._failed.add(key)
+                            continue
                     self._store[key] = prog
                     self.stats["sched"] += 1
                     obs_event("schedule.pair", pe=v.name, app=a, ii=prog.ii)
             elif misses:
                 for v, a, key in misses:
                     with span("schedule.pair", pe=v.name, app=a):
-                        self._store[key] = build_sim(
-                            v.datapath, mappings[(v.name, a)], self.apps[a],
-                            pnr=pnrs[(v.name, a)])[0]
+                        prog = self._attempt(
+                            "schedule",
+                            lambda v=v, a=a: serial_sched(v, a),
+                            pe=v.name, app=a)
+                    if prog is _FAILED:
+                        self._failed.add(key)
+                        continue
+                    self._store[key] = prog
                     self.stats["sched"] += 1
-        return {pair: self._store[key] for pair, key in keys.items()}
+        return {pair: self._store[key] for pair, key in keys.items()
+                if key in self._store}
 
     def simulate(self) -> Dict[Pair, int]:
         """Golden-verification flags per pair (−1 when verify is off) —
@@ -609,14 +812,24 @@ class Explorer:
         misses = []
         for v, app_name, map_key in self._pairs():
             pair = (v.name, app_name)
+            if pair not in progs:                    # failed upstream
+                continue
             key = ("sim", map_key[1:], _pnr_fields(options, cfg.pnr_batch),
-                   _sim_fields(options), cfg.sim_batch)
+                   _sim_fields(options), cfg.sim_batch,
+                   _sched_fields(options))
+            if key in self._failed:          # degraded earlier this run
+                continue
             keys[pair] = key
             if key not in self._store:
                 misses.append((v, app_name, key))
                 self.metrics.inc("memo.miss.sim")
             else:
                 self.metrics.inc("memo.hit.sim")
+
+        def serial_sim(v, a):
+            return _verify_prog(progs[(v.name, a)], self.apps[a],
+                                f"{a} on {v.name}", options,
+                                _pair_nonce(v.name, a))
 
         grouped = (cfg.sim_batch == "grouped"
                    and options.sim_backend == "jax" and options.sim_verify)
@@ -625,40 +838,79 @@ class Explorer:
             if misses and grouped:
                 from ..sim import (compare_with_interp, random_inputs,
                                    sim_signature, simulate_batch)
+                from ..sim.cycle import check_cycle_budget
                 by_bucket: Dict[Tuple, List[int]] = defaultdict(list)
-                inputs = []
+                inputs: Dict[int, Any] = {}
+                retry: Dict[int, Exception] = {}
                 for i, (v, a, key) in enumerate(misses):
                     prog = progs[(v.name, a)]
-                    inputs.append(random_inputs(
-                        prog, options.sim_iterations, options.sim_batch,
-                        seed=options.input_seed(_pair_nonce(v.name, a))))
+                    try:
+                        faultinject.fire("simulate", pe=v.name, app=a)
+                        check_cycle_budget(prog, options.sim_iterations,
+                                           options.sim_max_cycles,
+                                           metrics=self.metrics)
+                        inputs[i] = random_inputs(
+                            prog, options.sim_iterations, options.sim_batch,
+                            seed=options.input_seed(_pair_nonce(v.name, a)))
+                    except Exception as e:
+                        if not self._isolating():
+                            raise
+                        retry[i] = e
+                        continue
                     by_bucket[sim_signature(prog, options.sim_iterations,
                                             options.sim_batch)].append(i)
                 for bucket, idxs in by_bucket.items():
-                    results = simulate_batch(
-                        [progs[(misses[i][0].name, misses[i][1])]
-                         for i in idxs], [inputs[i] for i in idxs],
-                        metrics=self.metrics)
+                    try:
+                        results = simulate_batch(
+                            [progs[(misses[i][0].name, misses[i][1])]
+                             for i in idxs], [inputs[i] for i in idxs],
+                            metrics=self.metrics)
+                    except Exception as e:
+                        if not self._isolating():
+                            raise
+                        for i in idxs:   # whole-dispatch failure: every
+                            retry[i] = e  # rider retries serially
+                        continue
                     self.stats["sim_dispatch"] += 1
                     self.metrics.observe("sim.bucket_size", len(idxs))
                     for i, res in zip(idxs, results):
                         v, a, key = misses[i]
-                        with span("simulate.pair", pe=v.name, app=a):
-                            err, exact = compare_with_interp(
-                                progs[(v.name, a)], self.apps[a],
-                                inputs[i], res)
-                            self._store[key] = _require_exact(
-                                err, exact, f"{a} on {v.name}")
-                        self.stats["sim"] += 1
+                        try:
+                            with span("simulate.pair", pe=v.name, app=a):
+                                err, exact = compare_with_interp(
+                                    progs[(v.name, a)], self.apps[a],
+                                    inputs[i], res)
+                                self._store[key] = _require_exact(
+                                    err, exact, f"{a} on {v.name}")
+                            self.stats["sim"] += 1
+                        except Exception as e:
+                            if not self._isolating():
+                                raise
+                            retry[i] = e
+                for i in sorted(retry):
+                    v, a, key = misses[i]
+                    flag = self._retry("simulate",
+                                       lambda v=v, a=a: serial_sim(v, a),
+                                       pe=v.name, app=a)
+                    if flag is _FAILED:
+                        self._failed.add(key)
+                        continue
+                    self._store[key] = flag
+                    self.stats["sim"] += 1
             elif misses:
                 for v, a, key in misses:
                     with span("simulate.pair", pe=v.name, app=a):
-                        self._store[key] = _verify_prog(
-                            progs[(v.name, a)], self.apps[a],
-                            f"{a} on {v.name}", options,
-                            _pair_nonce(v.name, a))
+                        flag = self._attempt(
+                            "simulate",
+                            lambda v=v, a=a: serial_sim(v, a),
+                            pe=v.name, app=a)
+                    if flag is _FAILED:
+                        self._failed.add(key)
+                        continue
+                    self._store[key] = flag
                     self.stats["sim"] += 1
-        return {pair: self._store[key] for pair, key in keys.items()}
+        return {pair: self._store[key] for pair, key in keys.items()
+                if key in self._store}
 
     def sim_buckets(self, progs: Dict[Pair, Any]) -> Dict[Pair, str]:
         """Provenance: the batched-simulate bucket each pair rides.
@@ -684,6 +936,8 @@ class Explorer:
     # -- full pipeline -----------------------------------------------------
     def run(self) -> ExploreResult:
         cfg = self.config
+        self.failures = []               # per-run; stages re-attempt what
+        self._failed.clear()             # failed last time (never memoized)
         t0 = time.monotonic()
         with span("explore.run", mode=cfg.mode):
             ranked = self.rank()
@@ -700,15 +954,20 @@ class Explorer:
                 mk = ("map", self._merge_key(
                     a if cfg.mode == "per_app" else None), v.name,
                     self._app_keys[a])
+                if mk not in self._store:    # pair failed the map stage
+                    continue
                 cost = _dc_replace(self._cost(v, a, mk))
                 if (v.name, a) in pnrs:
                     from ..fabric.cost import attach_fabric
                     out.fabric_costs[a] = pnrs[(v.name, a)].cost
                     attach_fabric(cost, pnrs[(v.name, a)].cost)
                 if (v.name, a) in progs:
+                    # a pair whose simulate stage degraded keeps its
+                    # schedule columns with verified=0 (attempted, no
+                    # golden proof); -1 stays "verification off"
                     attach_sim(cost, v.datapath, progs[(v.name, a)].schedule,
                                fabric_cost=pnrs[(v.name, a)].cost,
-                               verified=verified.get((v.name, a), -1))
+                               verified=verified.get((v.name, a), 0))
                 out.costs[a] = cost
             return out
 
@@ -718,8 +977,10 @@ class Explorer:
         results: Dict[str, DSEResult] = {}
         if cfg.mode == "per_app":
             for name, app in self.apps.items():
+                if name not in variants:     # app degraded upstream
+                    continue
                 results[name] = DSEResult(
-                    {name: app}, {name: ranked[name]},
+                    {name: app}, {name: ranked.get(name, [])},
                     [fresh(v, [name]) for v in variants[name]], elapsed)
         else:
             results[cfg.domain_name] = DSEResult(
@@ -729,4 +990,4 @@ class Explorer:
         return ExploreResult(cfg, _digest(cfg.to_dict()), dict(self.apps),
                              results, elapsed,
                              self.sim_buckets(progs) if progs else {},
-                             self.metrics.to_dict())
+                             self.metrics.to_dict(), list(self.failures))

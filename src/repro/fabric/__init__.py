@@ -56,7 +56,8 @@ def place_and_route(dp: Datapath, mapping: Mapping, app: Graph,
                     sweeps: int = 32, seed: int = 0,
                     auto_size: bool = True, pe_name: str = "PE",
                     hpwl_backend: str = "jnp",
-                    score_mode: str = "delta") -> PnRResult:
+                    score_mode: str = "delta",
+                    max_states: Optional[int] = None) -> PnRResult:
     """Full flow: netlist -> place -> route -> array-level cost."""
     spec = spec or FabricSpec()
     netlist = extract_netlist(mapping, app, spec)
@@ -64,7 +65,7 @@ def place_and_route(dp: Datapath, mapping: Mapping, app: Graph,
         spec = spec.fit(len(netlist.pe_cells), len(netlist.io_cells))
     placement = place(netlist, spec, backend=backend, chains=chains,
                       sweeps=sweeps, seed=seed, hpwl_backend=hpwl_backend,
-                      score_mode=score_mode)
+                      score_mode=score_mode, max_states=max_states)
     routes = route_nets(netlist, placement, spec)
     fc = evaluate_fabric(dp, mapping, netlist, placement, routes, spec,
                          pe_name=pe_name)

@@ -42,6 +42,21 @@ class FabricOptions:
                      per-pair loop.
     sim_verify     — bit-compare simulated outputs against graphir.interp
                      and record the result (raises on mismatch).
+
+    Budgets (all deterministic, all default-off / legacy-default so
+    results are bit-identical unless a budget is actually exhausted; on
+    exhaustion the stage raises :class:`repro.errors.BudgetExceeded`
+    instead of looping or hanging — see ISSUE 8):
+
+    sched_max_ii        — cap on the modulo scheduler's II search (None =
+                          the legacy mii + n_ops + 1 bound).
+    sched_budget_factor — scheduler eviction budget multiplier (budget =
+                          factor * n_ops + 64 evictions per II; 8 is the
+                          legacy constant).
+    anneal_max_states   — cap on chains x sweeps x n_entities per anneal
+                          problem, checked *before* dispatch (None = off).
+    sim_max_cycles      — cap on total simulated cycles per program,
+                          checked before dispatch (None = off).
     """
 
     spec: Optional[FabricSpec] = None
@@ -56,6 +71,10 @@ class FabricOptions:
     sim_batch: int = 2
     sim_backend: str = "jax"
     sim_verify: bool = True
+    sched_max_ii: Optional[int] = None
+    sched_budget_factor: int = 8
+    anneal_max_states: Optional[int] = None
+    sim_max_cycles: Optional[int] = None
 
     def with_spec(self, spec: FabricSpec) -> "FabricOptions":
         return replace(self, spec=spec)

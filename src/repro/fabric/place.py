@@ -530,13 +530,41 @@ def _build_batch_annealer(s_pad: int, n_pad: int, d_pad: int, e_pad: int,
     return jax.jit(jax.vmap(chain))
 
 
+def check_anneal_budget(p: PlacementProblem, chains: int, sweeps: int,
+                        max_states: Optional[int], *,
+                        metrics=None) -> None:
+    """Refuse (pre-dispatch) an anneal whose state count exceeds budget.
+
+    The annealing budget is deterministic and size-based — ``chains x
+    sweeps x n_entities`` proposed states per problem — so exhaustion is
+    a property of the problem, not of wall clock, and results stay
+    bit-identical whenever the budget is *not* exhausted.  Raises
+    :class:`repro.errors.BudgetExceeded` before any compilation or
+    dispatch happens; no-op when ``max_states`` is None (the default).
+    """
+    if max_states is None:
+        return
+    states = chains * max(1, sweeps * (p.n_pe_cells + p.n_io_cells))
+    if states > max_states:
+        if metrics is not None:
+            metrics.inc("pnr.budget_exhausted")
+        from ..errors import BudgetExceeded
+        raise BudgetExceeded(
+            f"anneal needs {states} states "
+            f"({chains} chains x {sweeps} sweeps x "
+            f"{p.n_pe_cells + p.n_io_cells} cells > "
+            f"anneal_max_states={max_states})",
+            states=states, max_states=max_states, chains=chains,
+            sweeps=sweeps, n_entities=p.n_entities)
+
+
 def anneal_jax_batch(problems: List[PlacementProblem], *, chains: int = 16,
                      seed: int = 0, sweeps: int = 32,
                      t0: Optional[float] = None, t1: float = 0.02,
                      score_mode: str = "delta",
                      nonces: Optional[List[int]] = None,
                      telemetry: Optional[bool] = None,
-                     metrics=None
+                     metrics=None, max_states: Optional[int] = None
                      ) -> List[Tuple[np.ndarray, np.ndarray]]:
     """Anneal many placement problems in one JAX dispatch.
 
@@ -574,6 +602,9 @@ def anneal_jax_batch(problems: List[PlacementProblem], *, chains: int = 16,
         nonces = list(range(len(problems)))
     if len(nonces) != len(problems):
         raise ValueError("nonces must match problems 1:1")
+    for p in problems:
+        check_anneal_budget(p, chains, sweeps, max_states,
+                            metrics=metrics or global_registry())
     sigs = {batch_signature(p, sweeps) for p in problems}
     if len(sigs) != 1:
         raise ValueError(f"problems span {len(sigs)} batch signatures; "
@@ -642,13 +673,20 @@ def anneal_jax_batch(problems: List[PlacementProblem], *, chains: int = 16,
 def place(netlist: Netlist, spec: FabricSpec, *, backend: str = "jax",
           chains: int = 32, sweeps: int = 48, seed: int = 0,
           t0: Optional[float] = None, t1: float = 0.02,
-          hpwl_backend: str = "jnp", score_mode: str = "delta") -> Placement:
-    """Anneal and return the best chain's placement."""
+          hpwl_backend: str = "jnp", score_mode: str = "delta",
+          max_states: Optional[int] = None) -> Placement:
+    """Anneal and return the best chain's placement.
+
+    ``max_states`` bounds the anneal state budget (chains x sweeps x
+    entities) exactly like the batched path — the serial fallback must
+    not silently out-spend the budget the grouped dispatch enforces.
+    """
     if hpwl_backend not in ("jnp", "pallas"):
         raise ValueError(f"unknown hpwl_backend {hpwl_backend!r}")
     if score_mode not in ("delta", "full"):
         raise ValueError(f"unknown score_mode {score_mode!r}")
     p = lower(netlist, spec)
+    check_anneal_budget(p, chains, sweeps, max_states)
 
     if backend == "python":
         if hpwl_backend != "jnp":

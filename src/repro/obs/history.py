@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import json
 import os
+import sys
 import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -85,7 +86,14 @@ def append(row: Dict[str, Any], *, directory: str = DEFAULT_DIR) -> bool:
 
 
 def load(directory: str, bench: str) -> List[Dict[str, Any]]:
-    """All trajectory rows for one bench, oldest first (file order)."""
+    """All trajectory rows for one bench, oldest first (file order).
+
+    A corrupted line (truncated write, merge damage) is skipped with a
+    warning on stderr rather than failing the whole regression gate —
+    one bad trajectory point must not block every future nightly.  A
+    *parseable* row with a foreign schema still raises: that is a build
+    mismatch, not corruption.
+    """
     path = history_path(directory, bench)
     if not os.path.exists(path):
         return []
@@ -95,7 +103,16 @@ def load(directory: str, bench: str) -> List[Dict[str, Any]]:
             line = line.strip()
             if not line:
                 continue
-            row = json.loads(line)
+            try:
+                row = json.loads(line)
+            except ValueError as e:
+                print(f"warning: {path}:{i}: skipping corrupted history "
+                      f"row ({e})", file=sys.stderr)
+                continue
+            if not isinstance(row, dict):
+                print(f"warning: {path}:{i}: skipping non-object history "
+                      f"row", file=sys.stderr)
+                continue
             if row.get("schema") != HISTORY_SCHEMA:
                 raise ValueError(
                     f"{path}:{i}: history schema {row.get('schema')!r} "

@@ -105,6 +105,42 @@ class SimProgram:
                 f"steps={self.n_steps} wires={self.n_wire} "
                 f"latches={self.n_latch}]")
 
+    # _cache holds jitted steppers — process-local, unpicklable.  Dropping
+    # it on pickle makes SimPrograms storable in the explore DiskStore; a
+    # restored program just recompiles its stepper on first simulate().
+    def __getstate__(self) -> Dict[str, Any]:
+        state = dict(self.__dict__)
+        state["_cache"] = {}
+        return state
+
+    def __setstate__(self, state: Dict[str, Any]) -> None:
+        self.__dict__.update(state)
+
+
+def check_cycle_budget(prog: SimProgram, iterations: int,
+                       max_cycles: Optional[int], *,
+                       metrics=None) -> None:
+    """Refuse (pre-dispatch) to simulate a program over its cycle cap.
+
+    Raises :class:`repro.errors.BudgetExceeded` when ``max_cycles`` is
+    set and ``prog.total_cycles(iterations)`` exceeds it — checked before
+    any scan launches, so an over-budget program degrades to a structured
+    failure instead of burning the budget it already exceeds.  No-op when
+    ``max_cycles`` is None (the default).
+    """
+    if max_cycles is None:
+        return
+    total = prog.total_cycles(iterations)
+    if total > max_cycles:
+        if metrics is not None:
+            metrics.inc("sim.budget_exhausted")
+        from ..errors import BudgetExceeded
+        raise BudgetExceeded(
+            f"simulation of {prog.app_name} needs {total} cycles "
+            f"(> sim_max_cycles={max_cycles})",
+            total_cycles=total, max_cycles=max_cycles,
+            iterations=iterations, ii=prog.ii, latency=prog.latency)
+
 
 @dataclass
 class SimResult:

@@ -33,16 +33,24 @@ def build_sim(dp: Datapath, mapping: Mapping, app: Graph,
               place_backend: str = "jax", chains: int = 8,
               sweeps: int = 24, seed: int = 0,
               hpwl_backend: str = "jnp",
-              pnr: Optional[PnRResult] = None
+              pnr: Optional[PnRResult] = None,
+              max_ii: Optional[int] = None,
+              budget_factor: int = 8
               ) -> Tuple[SimProgram, PnRResult]:
-    """Place, route, schedule, and lower a mapping into a SimProgram."""
+    """Place, route, schedule, and lower a mapping into a SimProgram.
+
+    ``max_ii`` / ``budget_factor`` bound the scheduler's II search and
+    eviction budget (:func:`repro.sim.schedule.modulo_schedule`); on
+    exhaustion the scheduler raises :class:`repro.errors.BudgetExceeded`.
+    """
     if pnr is None:
         pnr = place_and_route(dp, mapping, app, spec,
                               backend=place_backend, chains=chains,
                               sweeps=sweeps, seed=seed,
                               hpwl_backend=hpwl_backend)
     sched = modulo_schedule(pnr.netlist, pnr.placement, pnr.routes,
-                            pnr.spec)
+                            pnr.spec, max_ii=max_ii,
+                            budget_factor=budget_factor)
     prog = lower_program(mapping, app, pnr.netlist, pnr.placement, sched)
     return prog, pnr
 
@@ -78,7 +86,8 @@ def random_inputs(prog: SimProgram, iterations: int, batch: int,
     return np.round(vals).astype(np.float32)   # integral: exact in f32
 
 
-def build_sim_batch(items, *, stats=None) -> list:
+def build_sim_batch(items, *, stats=None, max_ii: Optional[int] = None,
+                    budget_factor: int = 8, isolate: bool = False) -> list:
     """Schedule and lower many placed-and-routed pairs, batch-first.
 
     ``items``: one ``(dp, mapping, app, pnr)`` per pair.  Modulo
@@ -87,14 +96,47 @@ def build_sim_batch(items, *, stats=None) -> list:
     conflict-scan group per fabric signature); lowering stays per-pair
     (cheap Python).  Returns :class:`SimProgram` objects in ``items``
     order, bit-identical to ``build_sim(..., pnr=pnr)[0]`` per pair.
+
+    ``isolate=True``: a failing pair (fault-injection site ``schedule``,
+    an exhausted II budget, a lowering error) yields the Exception object
+    at its index instead of killing the batch; groupmates' schedules are
+    unaffected (each pair's coroutine trajectory is its own).
     """
+    from .. import faultinject
     from .schedule import modulo_schedule_batch
 
+    n = len(items)
+    failed: dict = {}
+    todo = []                        # indices still scheduling
+    for i, (_, mapping, _, _) in enumerate(items):
+        try:
+            faultinject.fire("schedule", app=mapping.app_name)
+            todo.append(i)
+        except Exception as e:
+            if not isolate:
+                raise
+            failed[i] = e
     scheds = modulo_schedule_batch(
-        [(pnr.netlist, pnr.placement, pnr.routes, pnr.spec)
-         for _, _, _, pnr in items], stats=stats)
-    return [lower_program(mapping, app, pnr.netlist, pnr.placement, sched)
-            for (_, mapping, app, pnr), sched in zip(items, scheds)]
+        [(items[i][3].netlist, items[i][3].placement, items[i][3].routes,
+          items[i][3].spec) for i in todo],
+        stats=stats, max_ii=max_ii, budget_factor=budget_factor,
+        isolate=isolate)
+    out: list = [None] * n
+    for i, sched in zip(todo, scheds):
+        _, mapping, app, pnr = items[i]
+        if isinstance(sched, Exception):
+            out[i] = sched
+            continue
+        try:
+            out[i] = lower_program(mapping, app, pnr.netlist,
+                                   pnr.placement, sched)
+        except Exception as e:
+            if not isolate:
+                raise
+            out[i] = e
+    for i, e in failed.items():
+        out[i] = e
+    return out
 
 
 def compare_with_interp(prog: SimProgram, app: Graph, inputs: np.ndarray,

@@ -42,6 +42,7 @@ from typing import Dict, Generator, List, Optional, Set, Tuple
 
 import numpy as np
 
+from ..errors import BudgetExceeded
 from ..fabric.arch import Coord, FabricSpec
 from ..fabric.netlist import Netlist
 from ..fabric.place import Placement
@@ -272,8 +273,11 @@ def modulo_schedule(netlist: Netlist, placement: Placement,
     """Schedule every I/O stream and PE instance under modulo resources.
 
     Tries II = MII, MII+1, ... with Rau-style scheduling (priority by
-    height, bounded eviction budget per II).  Raises if nothing fits by
-    ``max_ii`` (default: number of ops + MII, always sufficient for a DAG).
+    height, bounded eviction budget per II).  Raises
+    :class:`repro.errors.BudgetExceeded` (a RuntimeError) when nothing
+    fits by ``max_ii`` (default: number of ops + MII, always sufficient
+    for a DAG — a finite exhaustion point, so the search is a budget, not
+    an open-ended loop).
     """
     p, timing = _build_problem(netlist, placement, routes)
     rec_mii, res_mii = _min_ii(p, routes, spec)
@@ -293,7 +297,10 @@ def modulo_schedule(netlist: Netlist, placement: Placement,
         if start is not None:
             return _finish(p, timing, ii, rec_mii, res_mii, start, attempts,
                            depth)
-    raise RuntimeError(f"no modulo schedule found up to II={max_ii}")
+    stats["sched_budget_exhausted"] += 1
+    raise BudgetExceeded(f"no modulo schedule found up to II={max_ii}",
+                         max_ii=max_ii, mii=mii, attempts=attempts,
+                         n_ops=len(p.ops), budget_factor=budget_factor)
 
 
 def fabric_signature(spec: FabricSpec) -> Tuple[int, int, int, int]:
@@ -318,7 +325,7 @@ def modulo_schedule_batch(items: List[Tuple[Netlist, Placement, RouteResult,
                                             FabricSpec]],
                           *, max_ii: Optional[int] = None,
                           budget_factor: int = 8,
-                          stats=None) -> List[ModuloSchedule]:
+                          stats=None, isolate: bool = False) -> List:
     """Modulo-schedule many placed-and-routed pairs, batch-first.
 
     Pairs are grouped by :func:`fabric_signature`; within a group every
@@ -329,8 +336,14 @@ def modulo_schedule_batch(items: List[Tuple[Netlist, Placement, RouteResult,
     :func:`modulo_schedule` on that pair alone.  ``stats`` (a Counter, if
     given) gets one ``sched_group`` tick per lockstep group.  Returns
     schedules in ``items`` order.
+
+    ``isolate=True`` turns per-pair failures (an unschedulable pair
+    exhausting its II budget, a malformed problem) into Exception objects
+    at that pair's output index instead of killing the whole group — each
+    pair's coroutine trajectory depends only on its own state, so a
+    dropped pair cannot change its groupmates' schedules.
     """
-    out: List[Optional[ModuloSchedule]] = [None] * len(items)
+    out: List = [None] * len(items)
     groups: Dict[Tuple, List[int]] = {}
     for i, (_, _, _, spec) in enumerate(items):
         groups.setdefault(fabric_signature(spec), []).append(i)
@@ -341,20 +354,26 @@ def modulo_schedule_batch(items: List[Tuple[Netlist, Placement, RouteResult,
         with span("schedule.group", fabric="x".join(map(str, sig)),
                   pairs=len(idxs)):
             _schedule_group(items, idxs, out, max_ii, budget_factor,
-                            stats=stats)
+                            stats=stats, isolate=isolate)
     return out
 
 
 def _schedule_group(items, idxs: List[int], out: List,
                     max_ii: Optional[int], budget_factor: int,
-                    stats=None) -> None:
+                    stats=None, isolate: bool = False) -> None:
     pairs: List[_PairSched] = []
     for i in idxs:
         netlist, placement, routes, spec = items[i]
         st = _PairSched()
         st.index = i
-        st.p, st.timing = _build_problem(netlist, placement, routes)
-        st.rec_mii, st.res_mii = _min_ii(st.p, routes, spec)
+        try:
+            st.p, st.timing = _build_problem(netlist, placement, routes)
+            st.rec_mii, st.res_mii = _min_ii(st.p, routes, spec)
+        except Exception as e:
+            if not isolate:
+                raise
+            out[i] = e
+            continue
         st.ii = max(st.rec_mii, st.res_mii)
         st.max_ii = (st.ii + len(st.p.ops) + 1) if max_ii is None else max_ii
         st.heights = _heights(st.p)
@@ -383,11 +402,28 @@ def _schedule_group(items, idxs: List[int], out: List,
                 return False
             st.ii += 1                    # this II failed; retry one higher
             if st.ii > st.max_ii:
-                raise RuntimeError(
-                    f"no modulo schedule found up to II={st.max_ii}")
+                if stats is not None:
+                    stats["sched_budget_exhausted"] += 1
+                raise BudgetExceeded(
+                    f"no modulo schedule found up to II={st.max_ii}",
+                    max_ii=st.max_ii, mii=max(st.rec_mii, st.res_mii),
+                    attempts=st.attempts, n_ops=len(st.p.ops),
+                    budget_factor=budget_factor)
             return start(st)
 
-    active = [st for st in pairs if start(st)]
+    def safely(st: _PairSched, fn) -> bool:
+        """Run start/advance, dropping (not killing) the pair's group
+        when isolating — a failed pair's slot gets its exception."""
+        try:
+            return fn()
+        except Exception as e:
+            if not isolate:
+                raise
+            out[st.index] = e
+            return False
+
+    active = [st for st in pairs
+              if safely(st, lambda st=st: start(st))]
     while active:
         answers = _feasible_scan_batch([st.req for st in active])
         if stats is not None:
@@ -396,7 +432,7 @@ def _schedule_group(items, idxs: List[int], out: List,
             stats["sched_backtracks"] += sum(1 for a in answers
                                              if a is None)
         active = [st for st, ans in zip(active, answers)
-                  if advance(st, ans)]
+                  if safely(st, lambda st=st, ans=ans: advance(st, ans))]
 
 
 def _slots_needed(p: _Problem, op: OpKey, t: int,

@@ -1,0 +1,54 @@
+"""Shared fault-injection helpers for the robustness tests.
+
+Not a test module — imported by test_faults.py / test_persist.py.  The
+one rule: injection state is process-global, so every armed spec must be
+disarmed even when the test body throws; :func:`armed` is the only
+sanctioned way to arm specs from a test.
+"""
+
+import contextlib
+
+from repro import faultinject
+from repro.explore import ExploreConfig, Explorer
+from repro.fabric import FabricOptions, FabricSpec
+
+
+@contextlib.contextmanager
+def armed(*specs: str):
+    """Arm ``site:kind:nth`` specs for the duration of a with-block."""
+    faultinject.disarm_all()
+    for s in specs:
+        faultinject.arm(s)
+    try:
+        yield
+    finally:
+        faultinject.disarm_all()
+
+
+def tiny_case(**fabric_kw):
+    """The Fig. 3 conv on a 4x4 fabric — the cheapest full-pipeline case
+    (mirrors the CLI's ``_smoke_case``; kwargs override FabricOptions)."""
+    from repro.core.mining import MiningConfig
+    from repro.graphir import trace_scalar
+
+    def conv4(i0, i1, i2, i3, w0, w1, w2, w3, c):
+        return (((i0 * w0) + (i1 * w1)) + (i2 * w2)) + (i3 * w3) + c
+
+    apps = {"conv": trace_scalar(
+        conv4, ["i0", "i1", "i2", "i3", "w0", "w1", "w2", "w3", "c"])}
+    cfg = ExploreConfig(
+        mode="per_app",
+        mining=MiningConfig(min_support=2, max_pattern_nodes=5),
+        max_merge=2,
+        fabric=FabricOptions(spec=FabricSpec(rows=4, cols=4),
+                             chains=2, sweeps=4, simulate=True,
+                             **fabric_kw))
+    return apps, cfg
+
+
+def run_explorer(apps, cfg, *specs: str):
+    """Fresh Explorer + run under armed specs; returns (explorer, result)."""
+    ex = Explorer(apps, cfg)
+    with armed(*specs):
+        res = ex.run()
+    return ex, res

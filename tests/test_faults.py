@@ -1,0 +1,311 @@
+"""Fault isolation, stage budgets, the injection harness, CLI exit codes."""
+
+import json
+
+import pytest
+
+from faults import armed, run_explorer, tiny_case
+from repro import faultinject
+from repro.errors import BudgetExceeded, InjectedFault
+from repro.explore import (ConfigFormatError, ExploreConfig, Explorer,
+                           RecordFormatError, StageFailure,
+                           failures_from_jsonl, from_jsonl,
+                           summarize_failures, to_jsonl)
+from repro.explore.records import ExploreRecord
+
+
+# ---------------------------------------------------------------------------
+# the injection harness itself
+# ---------------------------------------------------------------------------
+def test_fault_spec_parse():
+    fs = faultinject.FaultSpec.parse("pnr:exc:2")
+    assert (fs.site, fs.kind, fs.nth, fs.persistent) == ("pnr", "exc", 2,
+                                                         False)
+    fs = faultinject.FaultSpec.parse("schedule:budget:1+")
+    assert (fs.site, fs.kind, fs.nth, fs.persistent) == ("schedule",
+                                                         "budget", 1, True)
+    for bad in ("pnr:exc", "pnr:boom:0", "pnr:exc:x", "a:b:c:d"):
+        with pytest.raises(ValueError):
+            faultinject.FaultSpec.parse(bad)
+
+
+def test_fire_counts_occurrences():
+    with armed("s:exc:1"):
+        faultinject.fire("s")             # occurrence 0: silent
+        with pytest.raises(InjectedFault):
+            faultinject.fire("s")         # occurrence 1: fires
+        faultinject.fire("s")             # occurrence 2: spent
+    faultinject.fire("s")                 # disarmed: free
+
+
+def test_persistent_spec_keeps_firing():
+    with armed("s:exc:1+"):
+        faultinject.fire("s")
+        for _ in range(3):
+            with pytest.raises(InjectedFault):
+                faultinject.fire("s")
+
+
+def test_budget_kind_carries_state():
+    with armed("s:budget:0"):
+        with pytest.raises(BudgetExceeded) as ei:
+            faultinject.fire("s", pe="PE1")
+    assert ei.value.budget.get("injected") is True
+
+
+def test_truncate_kind_sets_flag_not_exception():
+    with armed("s:truncate:0"):
+        faultinject.fire("s")             # no raise
+        assert faultinject.consume_flag("s") is True
+        assert faultinject.consume_flag("s") is False
+
+
+# ---------------------------------------------------------------------------
+# per-pair isolation in the pipeline
+# ---------------------------------------------------------------------------
+def test_transient_fault_absorbed_by_serial_retry():
+    apps, cfg = tiny_case()
+    ex, res = run_explorer(apps, cfg, "pnr:exc:0")
+    assert res.clean and not res.failures
+    assert ex.metrics.counter("isolate.retry.pnr") == 1
+    assert res.records(), "retry produced no records"
+
+
+def test_persistent_fault_degrades_pair_groupmates_bit_identical():
+    apps, cfg = tiny_case()
+    clean = Explorer(apps, cfg)
+    want = clean.pnr()
+
+    ex = Explorer(apps, cfg)
+    with armed("pnr:exc:0", "pnr.retry:exc:0"):
+        got = ex.pnr()
+    assert len(ex.failures) == 1
+    f = ex.failures[0]
+    assert f.stage == "pnr" and f.retried
+    assert f.error_type == "InjectedFault"
+    victim = (f.pe_name, f.app)
+    assert victim not in got
+    assert set(got) == set(want) - {victim}
+    for pair in got:                      # pow2-bucket independence
+        assert got[pair].placement.coords == want[pair].placement.coords
+        assert got[pair].cost == want[pair].cost
+
+
+def test_on_error_raise_fails_fast():
+    apps, cfg = tiny_case()
+    ex = Explorer(apps, cfg.replace(on_error="raise"))
+    with armed("pnr:exc:0"):
+        with pytest.raises(InjectedFault):
+            ex.pnr()
+    assert not ex.failures                # fail-fast records nothing
+
+
+def test_failures_never_memoized(tmp_path):
+    """A degraded pair recomputes on the next run — including against a
+    persistent store — instead of replaying the failure."""
+    from repro.explore import DiskStore
+    apps, cfg = tiny_case()
+    d = str(tmp_path / "store")
+    ex1 = Explorer(apps, cfg, store=DiskStore(d))
+    with armed("pnr:exc:0", "pnr.retry:exc:0"):
+        res1 = ex1.run()
+    assert res1.failures
+    ex2 = Explorer(apps, cfg, store=DiskStore(d))
+    res2 = ex2.run()                      # no faults armed: heals
+    assert res2.clean
+    assert {(r.pe_name, r.app) for r in res2.records()} \
+        > {(r.pe_name, r.app) for r in res1.records()
+           if r.fabric_area_um2 > 0}
+
+
+# ---------------------------------------------------------------------------
+# stage budgets: exhausted means degraded, never a hang
+# ---------------------------------------------------------------------------
+def test_anneal_budget_check():
+    from repro.fabric import FabricSpec, lower, synthetic_netlist
+    from repro.fabric.place import check_anneal_budget
+    spec = FabricSpec(rows=4, cols=4)
+    p = lower(synthetic_netlist(spec, seed=0), spec)
+    check_anneal_budget(p, 2, 4, None)    # no budget: no-op
+    check_anneal_budget(p, 2, 4, 10**9)   # generous budget: fine
+    with pytest.raises(BudgetExceeded) as ei:
+        check_anneal_budget(p, 2, 4, 1)
+    assert ei.value.budget["max_states"] == 1
+    assert ei.value.budget["states"] > 1
+
+
+def test_cycle_budget_check():
+    from repro.sim.cycle import check_cycle_budget
+
+    class Prog:
+        ii, latency, app_name = 4, 26, "conv"
+
+        def total_cycles(self, iterations):
+            return self.latency + self.ii * (iterations - 1)
+
+    check_cycle_budget(Prog(), 3, None)
+    check_cycle_budget(Prog(), 3, 10**6)
+    with pytest.raises(BudgetExceeded) as ei:
+        check_cycle_budget(Prog(), 3, 10)
+    assert ei.value.budget["total_cycles"] == 34
+    assert ei.value.budget["max_cycles"] == 10
+
+
+def test_exhausted_budget_becomes_stage_failure():
+    apps, cfg = tiny_case(anneal_max_states=1)
+    ex, res = run_explorer(apps, cfg)
+    assert res.failures
+    assert all(f.stage == "pnr" for f in res.failures)
+    assert all(f.error_type == "BudgetExceeded" for f in res.failures)
+    assert all(f.budget["max_states"] == 1 for f in res.failures)
+    assert ex.metrics.counter("budget_exhausted.pnr") == len(res.failures)
+    # degraded, not dead: records still exist with mapping-level columns
+    assert res.records()
+
+
+# ---------------------------------------------------------------------------
+# structured failure rows: round trips and summaries
+# ---------------------------------------------------------------------------
+def test_stage_failure_round_trip(tmp_path):
+    e = BudgetExceeded("no schedule up to II=4", max_ii=4, mii=2)
+    f = StageFailure.from_exception("schedule", e, pe_name="PE1",
+                                    app="conv", retried=True)
+    assert f.error_type == "BudgetExceeded"
+    assert f.budget == {"max_ii": 4, "mii": 2}
+    back = StageFailure.from_dict(f.to_dict())
+    assert back == f
+
+    path = str(tmp_path / "records.jsonl")
+    to_jsonl([], path, failures=[f])
+    assert failures_from_jsonl(path) == [f]
+    assert from_jsonl(path) == []         # records reader skips failures
+
+    assert summarize_failures([f, f]) == "schedule=2 (2 failures)"
+    assert summarize_failures([]) == "no failures"
+
+
+def test_stage_failure_rejects_malformed():
+    with pytest.raises(RecordFormatError):
+        StageFailure.from_dict({"kind": "stage_failure", "schema": 99,
+                                "stage": "pnr"})
+    with pytest.raises(RecordFormatError):
+        StageFailure.from_dict({"kind": "nope"})
+
+
+# ---------------------------------------------------------------------------
+# hardened loaders: one-line actionable errors, no stack-trace spelunking
+# ---------------------------------------------------------------------------
+def test_config_from_dict_unknown_field():
+    d = ExploreConfig(mode="per_app").to_dict()
+    d["max_merg"] = 3                     # typo
+    with pytest.raises(ConfigFormatError, match="unknown ExploreConfig"):
+        ExploreConfig.from_dict(d)
+
+
+def test_config_from_dict_wrong_type():
+    d = ExploreConfig(mode="per_app").to_dict()
+    d["max_merge"] = "three"
+    with pytest.raises(ConfigFormatError, match="must be int"):
+        ExploreConfig.from_dict(d)
+
+
+def test_config_from_dict_future_schema():
+    d = ExploreConfig(mode="per_app").to_dict()
+    d["schema"] = 99
+    with pytest.raises(ConfigFormatError, match="not supported"):
+        ExploreConfig.from_dict(d)
+
+
+def test_config_on_error_round_trip():
+    cfg = ExploreConfig(mode="per_app", on_error="raise")
+    assert ExploreConfig.from_dict(cfg.to_dict()).on_error == "raise"
+    with pytest.raises(ValueError):
+        ExploreConfig(mode="per_app", on_error="explode")
+
+
+def test_record_from_dict_errors():
+    row = {"kind_of": "wrong"}
+    with pytest.raises(RecordFormatError, match="unknown"):
+        ExploreRecord.from_dict({**_good_row(), "bogus_column": 1})
+    with pytest.raises(RecordFormatError, match="schema"):
+        ExploreRecord.from_dict({**_good_row(), "schema": 99})
+    with pytest.raises(RecordFormatError, match="missing"):
+        d = _good_row()
+        d.pop("app")
+        ExploreRecord.from_dict(d)
+    with pytest.raises(RecordFormatError):
+        ExploreRecord.from_dict(row)
+
+
+def _good_row():
+    from repro.explore.records import RECORD_SCHEMA
+    return dict(schema=RECORD_SCHEMA, mode="per_app", config_key="k",
+                n_merged=1, sim_bucket="", app="conv", pe_name="PE1",
+                n_pes=4, total_ops=9, pe_area_um2=1.0, total_area_um2=4.0,
+                energy_pj=1.0, energy_per_op_pj=0.1, fmax_ghz=1.0,
+                ops_per_pe=2.0, unmapped=0)
+
+
+def test_from_jsonl_names_bad_line(tmp_path):
+    path = str(tmp_path / "bad.jsonl")
+    with open(path, "w") as f:
+        f.write(json.dumps(_good_row()) + "\n")
+        f.write("{truncated...\n")
+    with pytest.raises(RecordFormatError, match=r"bad\.jsonl:2"):
+        from_jsonl(path)
+
+
+def test_history_skips_corrupt_lines(tmp_path, capsys):
+    from repro.obs import history
+    row = history.make_row("b", "smoke", {"m": 1.0},
+                           manifest={"git_sha": "abc"}, ts=0.0)
+    d = str(tmp_path)
+    assert history.append(row, directory=d)
+    with open(history.history_path(d, "b"), "a") as f:
+        f.write("{torn write...\n")
+    rows = history.load(d, "b")
+    assert len(rows) == 1                 # good row survives
+    assert "skipping corrupted history row" in capsys.readouterr().err
+
+
+# ---------------------------------------------------------------------------
+# CLI: structured failure summaries and exit codes
+# ---------------------------------------------------------------------------
+def _cli(*argv):
+    from repro.explore.__main__ import main
+    return main(list(argv))
+
+
+def test_cli_exit_codes_on_degraded_run(tmp_path, capsys):
+    args = ("per-app", "--suite", "camera", "--min-support", "2",
+            "--max-pattern-nodes", "4",
+            "--inject-fault", "map:exc:0",
+            "--inject-fault", "map.retry:exc:0")
+    assert _cli(*args) == 1               # degraded: nonzero
+    err = capsys.readouterr().err
+    assert "# DEGRADED: map=1 (1 failure)" in err
+    assert "Traceback" not in err
+    assert _cli(*args, "--allow-partial") == 0
+
+
+def test_cli_clean_run_exits_zero(capsys):
+    assert _cli("per-app", "--suite", "camera", "--min-support", "2",
+                "--max-pattern-nodes", "4") == 0
+    assert "DEGRADED" not in capsys.readouterr().err
+
+
+def test_cli_malformed_config_is_one_line_error(tmp_path, capsys):
+    cfg = str(tmp_path / "cfg.json")
+    with open(cfg, "w") as f:
+        json.dump({"schema": 99, "mode": "per_app"}, f)
+    assert _cli("per-app", "--config", cfg) == 2
+    err = capsys.readouterr().err
+    assert err.startswith("error: ")
+    assert "Traceback" not in err
+
+
+def test_cli_bad_fault_spec_is_one_line_error(capsys):
+    assert _cli("per-app", "--suite", "camera",
+                "--inject-fault", "pnr:frobnicate:0") == 1
+    err = capsys.readouterr().err
+    assert err.startswith("error: ValueError")
