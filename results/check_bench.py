@@ -45,6 +45,7 @@ METRIC_KEYS = frozenset({
     "sched_rounds", "sched_scans", "sched_backtracks",
     "memo_hit", "memo_miss", "compile_events", "compile_secs",
     "host_peak_bytes", "device_bytes",
+    "serve_requests", "serve_batches", "serve_cache_hits",
 })
 
 #: the run-manifest contract, mirrored from src/repro/obs/manifest.py —
@@ -202,10 +203,44 @@ def check_pnr_bench(data: Dict, path: str, errors: List[str]) -> str:
     return f"{len(sizes)} sizes bit-identical"
 
 
+def check_serve(data: Dict, path: str, errors: List[str]) -> str:
+    """Concurrent serving must beat serial clients, stay bit-identical
+    to solo runs (the serving guarantee), and amortize dispatches: N
+    overlapping clients must cost < 1.5x a *single* union client's
+    dispatch count and never more than serving them serially."""
+    _manifest(data, path, errors)
+    _repeats(data, path, errors)
+    _ratio(data, path, "speedup", errors)
+    _flag(data, path, "bit_identical", errors)
+    _ratio(data, path, "cache_speedup", errors, floor=10.0)
+    n = data.get("n_clients")
+    if not isinstance(n, int) or n < 4:
+        errors.append(f"{path}: n_clients={n!r}, expected >= 4")
+    single = data.get("single_dispatches", 0)
+    batched = data.get("batched_dispatches")
+    if not isinstance(batched, (int, float)) or batched > 1.5 * single:
+        errors.append(f"{path}: batched_dispatches={batched!r} exceeds "
+                      f"1.5x single client's {single!r}")
+    if batched is not None and batched > data.get("serial_dispatches", 0):
+        errors.append(f"{path}: batched serving used more dispatches than "
+                      f"serial clients")
+    _metrics(data, path, errors, expect={})
+    block = data.get("metrics", {})
+    if isinstance(block, dict):
+        reqs = block.get("serve_requests", 0)
+        if isinstance(n, int) and reqs < n:
+            errors.append(f"{path}: metrics[serve_requests]={reqs!r} < "
+                          f"n_clients={n!r}")
+    return (f"speedup={data.get('speedup')}x, {n} clients at "
+            f"{data.get('dispatch_ratio')}x one client's dispatches, "
+            f"bit-exact, cache {data.get('cache_speedup')}x")
+
+
 CHECKS = {
     "explore_pnr_batch": check_explore_pnr,
     "explore_sim_batch": check_explore_sim,
     "pnr_bench/v2": check_pnr_bench,
+    "serve_bench/v1": check_serve,
 }
 
 

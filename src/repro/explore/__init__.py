@@ -27,7 +27,7 @@ pair degrades to a structured :class:`StageFailure` row in
 """
 
 from .config import CONFIG_SCHEMA, ConfigFormatError, ExploreConfig
-from .persist import DiskStore
+from .persist import DiskStore, FileLock, ThreadSafeStore
 from .pipeline import (Explorer, ExploreResult, evaluate_pairs, graph_key,
                        pnr_grouped)
 from .records import (FAILURE_SCHEMA, RECORD_SCHEMA, ExploreRecord,
@@ -37,7 +37,7 @@ from .records import (FAILURE_SCHEMA, RECORD_SCHEMA, ExploreRecord,
 
 __all__ = [
     "CONFIG_SCHEMA", "ConfigFormatError", "ExploreConfig",
-    "DiskStore",
+    "DiskStore", "FileLock", "ThreadSafeStore",
     "Explorer", "ExploreResult",
     "evaluate_pairs", "graph_key", "pnr_grouped",
     "FAILURE_SCHEMA", "RECORD_SCHEMA", "ExploreRecord",

@@ -20,6 +20,12 @@ An injection spec is ``site:kind:nth``:
 * ``nth`` — fire on the nth occurrence only (0-based), or ``N+`` to fire
   on the nth and every later occurrence (persistent fault).
 
+An optional fourth part scopes the injection to matching fire-site
+context: ``site:kind:nth:key=val`` (e.g. ``mine:exc:0+:app=poison``)
+only counts — and only fails — occurrences whose :func:`fire` call
+carried ``key=val`` in its ``ctx``.  This is how the serving tests
+poison one client's request while its batchmates stay healthy.
+
 State is process-global and explicitly armed/cleared; nothing here runs
 unless a spec was armed, so the zero-injection fast path is one dict
 lookup on an empty dict.
@@ -48,7 +54,11 @@ class FaultSpec:
     kind: str
     nth: int
     persistent: bool = False      # "N+" specs keep firing past nth
+    match: Dict[str, str] = field(default_factory=dict)  # ctx filter
     count: int = field(default=0)
+
+    def matches(self, ctx: Dict[str, object]) -> bool:
+        return all(str(ctx.get(k)) == v for k, v in self.match.items())
 
     def should_fire(self) -> bool:
         n = self.count
@@ -58,11 +68,19 @@ class FaultSpec:
     @staticmethod
     def parse(spec: str) -> "FaultSpec":
         parts = spec.split(":")
-        if len(parts) != 3:
+        if len(parts) not in (3, 4):
             raise ValueError(
-                f"bad fault spec {spec!r}: expected site:kind:nth "
-                f"(e.g. pnr:exc:0, schedule:budget:1+)")
-        site, kind, nth = parts
+                f"bad fault spec {spec!r}: expected site:kind:nth or "
+                f"site:kind:nth:key=val (e.g. pnr:exc:0, "
+                f"schedule:budget:1+, mine:exc:0+:app=poison)")
+        site, kind, nth = parts[:3]
+        match: Dict[str, str] = {}
+        if len(parts) == 4:
+            k, sep, v = parts[3].partition("=")
+            if not sep or not k:
+                raise ValueError(
+                    f"bad fault context {parts[3]!r}: expected key=val")
+            match[k] = v
         if kind not in KINDS:
             raise ValueError(f"bad fault kind {kind!r}: one of {KINDS}")
         persistent = nth.endswith("+")
@@ -70,7 +88,8 @@ class FaultSpec:
             n = int(nth[:-1] if persistent else nth)
         except ValueError:
             raise ValueError(f"bad fault occurrence {nth!r}: an int or N+")
-        return FaultSpec(site=site, kind=kind, nth=n, persistent=persistent)
+        return FaultSpec(site=site, kind=kind, nth=n, persistent=persistent,
+                         match=match)
 
 
 _ARMED: Dict[str, List[FaultSpec]] = {}
@@ -100,7 +119,9 @@ def fire(site: str, **ctx: object) -> None:
     ``kind="exc"`` raises :class:`InjectedFault`, ``"budget"`` raises
     :class:`BudgetExceeded`, ``"kill"`` SIGKILLs the process (the
     crash-resume harness), ``"truncate"`` raises nothing but sets a flag
-    for :func:`consume_flag`.  ``ctx`` only decorates the message.
+    for :func:`consume_flag`.  ``ctx`` decorates the message and feeds
+    each spec's optional ``key=val`` filter: a spec with a filter only
+    counts (and only fails) occurrences whose ctx matches.
     """
     specs = _ARMED.get(site)
     if not specs:
@@ -109,6 +130,8 @@ def fire(site: str, **ctx: object) -> None:
         site + "[" + ",".join(f"{k}={v}" for k, v in sorted(ctx.items()))
         + "]")
     for fs in specs:
+        if fs.match and not fs.matches(ctx):
+            continue
         if not fs.should_fire():
             continue
         if fs.kind == "exc":

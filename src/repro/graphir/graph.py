@@ -137,6 +137,47 @@ class Graph:
         g._next_id = self._next_id
         return g
 
+    # -- JSON round trip ------------------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        """JSON-serializable dict; :meth:`from_dict` restores a graph whose
+        :func:`repro.explore.graph_key` fingerprint matches the original's
+        (node ids, attrs, edge set, and output order all preserved)."""
+        return {
+            "nodes": {str(n): op for n, op in sorted(self.nodes.items())},
+            "attrs": {str(n): dict(a)
+                      for n, a in sorted(self.attrs.items()) if a},
+            "edges": sorted(list(e) for e in self.edges),
+            "outputs": list(self.outputs),
+        }
+
+    @staticmethod
+    def from_dict(d: Dict[str, Any]) -> "Graph":
+        """Rebuild a graph from :meth:`to_dict` output, validating ops and
+        edge endpoints (raises ``ValueError`` on malformed input)."""
+        if not isinstance(d, dict):
+            raise ValueError(f"graph blob must be an object, "
+                             f"got {type(d).__name__}")
+        g = Graph()
+        try:
+            nodes = {int(n): str(op)
+                     for n, op in dict(d.get("nodes", {})).items()}
+        except (TypeError, ValueError):
+            raise ValueError("graph nodes must map int ids to op names")
+        for nid, op in nodes.items():
+            if op not in OPS:
+                raise ValueError(f"unknown op {op!r} at node {nid}")
+        g.nodes = nodes
+        g.attrs = {int(n): dict(a)
+                   for n, a in dict(d.get("attrs", {})).items()}
+        for (s, dst, p) in d.get("edges", []):
+            g.add_edge(int(s), int(dst), int(p))
+        for nid in d.get("outputs", []):
+            if int(nid) not in g.nodes:
+                raise ValueError(f"output node {nid} does not exist")
+            g.outputs.append(int(nid))
+        g._next_id = max(g.nodes, default=-1) + 1
+        return g
+
     def relabeled(self) -> "Graph":
         """Copy with node ids renumbered 0..n-1 in topological order."""
         mapping = {old: i for i, old in enumerate(self.topo_order())}

@@ -107,6 +107,11 @@ _FLATTENERS = {
          "grouped_sched_groups"),
         ("bit_identical", "ii_identical", "verified")),
     "pnr_bench/v2": _flatten_pnr,
+    "serve_bench/v1": lambda d: _flatten_explore(
+        d, ("serial_s", "batched_s", "cache_hit_ms"),
+        ("serial_dispatches", "batched_dispatches", "single_dispatches",
+         "n_clients"),
+        ("bit_identical",)),
 }
 
 

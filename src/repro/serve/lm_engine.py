@@ -1,0 +1,123 @@
+"""LM demo engine: continuous prefill+decode over a token-request queue.
+
+Static-shape serving in the vLLM spirit adapted to XLA: a fixed decode batch
+of ``slots``; finished/empty slots are refilled by prefilling queued
+requests into the slot's cache region.  All steps are jitted with static
+shapes (slot count, smax), so serving never recompiles.
+
+Single-host CPU demo scale here; the decode_step itself is exactly what the
+dry-run lowers for 512 chips (launch/dryrun.py decode cells).
+
+.. deprecated::
+    ``repro.serve`` now names the exploration serving subsystem
+    (:mod:`repro.serve.frontend` / :mod:`repro.serve.batcher`).  This LM
+    demo lives on here for the sharding tests; importing it through
+    ``repro.serve.engine`` (or the package-level ``ServeEngine`` /
+    ``Request`` names) warns ``DeprecationWarning``.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.config import ArchConfig
+from ..models.model import decode_step, init_cache, prefill
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (S,) int32
+    max_new: int = 16
+    out: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, params: Any, *, slots: int = 4,
+                 smax: int = 512, compute_dtype=jnp.bfloat16):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.smax = smax
+        self.compute_dtype = compute_dtype
+        self.queue: List[Request] = []
+        self.all_requests: List[Request] = []
+        self.active: List[Optional[Request]] = [None] * slots
+        self.remaining = np.zeros(slots, np.int32)
+        self.cache = init_cache(cfg, slots, smax, compute_dtype)
+        self.last_tok = jnp.zeros((slots,), jnp.int32)
+
+        self._decode = jax.jit(
+            lambda p, t, c: decode_step(p, cfg, t, c,
+                                        compute_dtype=compute_dtype))
+        # per-slot prefill is batched over a single sequence
+        self._prefill = jax.jit(
+            lambda p, toks: prefill(p, cfg, toks, smax=smax,
+                                    compute_dtype=compute_dtype),
+            static_argnums=())
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+        self.all_requests.append(req)
+
+    def _refill(self) -> None:
+        for s in range(self.slots):
+            if self.active[s] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            toks = jnp.asarray(req.prompt, jnp.int32)[None]
+            logits, c1 = self._prefill(self.params, toks)
+            # splice the slot's cache rows
+            def put(dst, src):
+                if dst.ndim >= 2 and dst.shape[1] == self.slots:
+                    return dst.at[:, s].set(src[:, 0])
+                return dst
+            for key in self.cache:
+                if key == "len":
+                    continue
+                self.cache[key] = put(self.cache[key], c1[key])
+            # slot-local length bookkeeping: engine uses a uniform len; for
+            # the demo all prompts share a length (padded upstream)
+            self.cache["len"] = jnp.asarray(len(req.prompt), jnp.int32)
+            tok = jnp.argmax(logits[0]).astype(jnp.int32)
+            self.last_tok = self.last_tok.at[s].set(tok)
+            req.out.append(int(tok))
+            self.active[s] = req
+            self.remaining[s] = req.max_new - 1
+
+    def step(self) -> int:
+        """One decode step for the whole batch; returns #active slots."""
+        self._refill()
+        if all(a is None for a in self.active):
+            return 0
+        logits, self.cache = self._decode(
+            self.params, self.last_tok, self.cache)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self.last_tok = next_tok
+        n_active = 0
+        toks = np.asarray(next_tok)
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            req.out.append(int(toks[s]))
+            self.remaining[s] -= 1
+            if self.remaining[s] <= 0:
+                req.done = True
+                self.active[s] = None
+            else:
+                n_active += 1
+        return n_active
+
+    def run(self, max_steps: int = 256) -> Dict[int, List[int]]:
+        for _ in range(max_steps):
+            if not self.queue and all(a is None for a in self.active):
+                break
+            self.step()
+        return {r.rid: r.out for r in self.all_requests}

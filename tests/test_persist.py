@@ -1,15 +1,17 @@
-"""DiskStore: checksums, quarantine, atomicity, crash-resume."""
+"""DiskStore: checksums, quarantine, atomicity, locking, crash-resume."""
 
 import glob
 import os
 import pickle
 import subprocess
 import sys
+import threading
+import time
 
 import pytest
 
 from faults import armed, tiny_case
-from repro.explore import DiskStore, Explorer
+from repro.explore import DiskStore, Explorer, FileLock, ThreadSafeStore
 from repro.explore.persist import MAGIC, STORE_SCHEMA, _key_filename
 from repro.obs.metrics import MetricsRegistry
 
@@ -151,6 +153,154 @@ def test_crash_resume_bit_identical(tmp_path):
     assert [r.to_dict() for r in ex3.run().records()] == want
     assert ex3.metrics.counter("memo.miss.sched") == 0
     assert ex3.metrics.counter("memo.miss.sim") == 0
+
+
+def test_filelock_mutual_exclusion(tmp_path):
+    lock_path = str(tmp_path / "x.lock")
+    order = []
+
+    def worker(tag):
+        with FileLock(lock_path):
+            order.append((tag, "in"))
+            time.sleep(0.05)
+            order.append((tag, "out"))
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(3)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    # critical sections never interleave: every "in" is followed by the
+    # same worker's "out"
+    for i in range(0, len(order), 2):
+        assert order[i][0] == order[i + 1][0]
+        assert order[i][1] == "in" and order[i + 1][1] == "out"
+
+
+def test_filelock_not_reentrant(tmp_path):
+    lk = FileLock(str(tmp_path / "x.lock"))
+    with lk:
+        with pytest.raises(RuntimeError):
+            lk.acquire()
+
+
+def test_concurrent_writers_no_corruption(tmp_path):
+    """N writers hammering one store directory (each its own DiskStore,
+    like N server processes): every committed entry must verify clean
+    on reopen — zero quarantines, and overlapping keys hold one of the
+    values actually written."""
+    d = str(tmp_path / "store")
+    n_writers, n_keys = 4, 12
+    errs = []
+
+    def writer(wid):
+        try:
+            s = DiskStore(d)
+            for i in range(n_keys):
+                s[("k", i)] = {"writer": wid, "i": i,
+                               "blob": list(range(200))}
+        except Exception as e:       # pragma: no cover - failure path
+            errs.append(e)
+
+    threads = [threading.Thread(target=writer, args=(w,))
+               for w in range(n_writers)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    reg = MetricsRegistry()
+    s = DiskStore(d, metrics=reg)
+    assert reg.counter("store.quarantined") == 0
+    assert len(s) == n_keys
+    for i in range(n_keys):
+        v = s[("k", i)]
+        assert v["i"] == i and v["writer"] in range(n_writers)
+        assert v["blob"] == list(range(200))
+    assert not glob.glob(os.path.join(d, "*.tmp"))
+
+
+def test_concurrent_writers_corrupted_entry_quarantined(tmp_path):
+    """A torn write into a store that concurrent writers filled degrades
+    to exactly one quarantined entry; every writer's entries stay
+    trusted."""
+    d = str(tmp_path / "store")
+
+    def writer(wid):
+        s = DiskStore(d)
+        for i in range(6):
+            s[("ok", wid, i)] = wid * 100 + i
+
+    threads = [threading.Thread(target=writer, args=(w,)) for w in range(3)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+    s0 = DiskStore(d)
+    with armed("store.write:truncate:0"):
+        s0[("torn", 0)] = list(range(50))    # committed, then torn
+
+    reg = MetricsRegistry()
+    s = DiskStore(d, metrics=reg)
+    assert reg.counter("store.quarantined") == 1
+    assert ("torn", 0) not in s              # recomputes, never trusted
+    for w in range(3):
+        for i in range(6):
+            assert s[("ok", w, i)] == w * 100 + i
+    reasons = glob.glob(os.path.join(s.quarantine_dir, "*.reason"))
+    assert reasons and "truncated payload" in open(reasons[0]).read()
+
+
+def test_read_through_adopts_foreign_writes(tmp_path):
+    """A miss checks the directory before recomputing: an entry another
+    process committed after our open is verified and adopted."""
+    d = str(tmp_path / "store")
+    rega, regb = MetricsRegistry(), MetricsRegistry()
+    a = DiskStore(d, metrics=rega)
+    b = DiskStore(d, metrics=regb)           # the "other process"
+    b[KEYS[0]] = {"from": "b"}
+    assert KEYS[0] in a                      # read-through, not a miss
+    assert a[KEYS[0]] == {"from": "b"}
+    assert rega.counter("store.readthrough") == 1
+
+    # a corrupt foreign entry is quarantined on read-through, not trusted
+    b[KEYS[1]] = "soon corrupt"
+    victim = os.path.join(d, _key_filename(KEYS[1]))
+    blob = bytearray(open(victim, "rb").read())
+    blob[-1] ^= 0xFF
+    open(victim, "wb").write(bytes(blob))
+    with pytest.raises(KeyError):
+        a[KEYS[1]]
+    assert rega.counter("store.quarantined") == 1
+
+
+def test_thread_safe_store_facade(tmp_path):
+    """ThreadSafeStore serializes mapping ops from many threads over one
+    shared inner store (the serving batcher's executor-thread shape)."""
+    inner = DiskStore(str(tmp_path / "store"))
+    s = ThreadSafeStore(inner)
+    errs = []
+
+    def worker(wid):
+        try:
+            for i in range(25):
+                s[("t", wid, i)] = wid
+                assert s[("t", wid, i)] == wid
+                assert ("t", wid, i) in s
+        except Exception as e:       # pragma: no cover - failure path
+            errs.append(e)
+
+    threads = [threading.Thread(target=worker, args=(w,)) for w in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    assert len(s) == 100
+    del s[("t", 0, 0)]
+    assert ("t", 0, 0) not in s
+    assert len(list(iter(s))) == 99
 
 
 @pytest.mark.slow
