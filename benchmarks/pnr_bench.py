@@ -14,8 +14,16 @@ wall-clock.  Results land in machine-readable ``results/BENCH_pnr.json``
 trajectory is tracked across PRs by ``python -m repro.obs.regress``;
 acceptance floor is a >=5x speedup at 32x32 plus a completed 64x64 anneal.
 
+The ``hier`` section times the two-level hierarchical flow
+(:func:`repro.fabric.place.place_hierarchical`) against the flat anneal
+on locality-structured mega-fabric netlists (64x64 and 128x128; 256x256
+with ``--mega``, the nightly budget), asserts delta-vs-full bit-identity
+at *every level* (cluster, detail, deblock), and records the
+hierarchical-vs-flat wall-clock ratio — the number that opens the
+>=128x128 regime the flat annealer cannot reach.
+
 Run:  PYTHONPATH=src python -m benchmarks.pnr_bench \
-          [--smoke] [--repeats N] [--out P]
+          [--smoke] [--mega] [--repeats N] [--out P]
 """
 
 from __future__ import annotations
@@ -32,7 +40,7 @@ from repro.apps import image_graphs
 from repro.core import baseline_datapath, map_application
 from repro.core.dse import app_ops
 from repro.fabric import (FabricSpec, extract_netlist, lower, place,
-                          route_nets, synthetic_netlist)
+                          place_hierarchical, route_nets, synthetic_netlist)
 from repro.fabric.place import anneal_jax, anneal_python
 
 from .common import emit, manifest_block, repeats_block
@@ -45,6 +53,14 @@ SCALE_SIZES = (8, 16, 32, 64)
 #: evaluation pays, so a short fixed budget at a fixed seed is enough
 SCALE_SWEEPS = 2
 SCALE_CHAINS = 1
+#: hierarchical sweep: sizes the committed report carries; 256x256 is the
+#: nightly (--mega) budget, flat comparison stops at HIER_FLAT_MAX
+HIER_SIZES = (64, 128)
+HIER_MEGA_SIZE = 256
+HIER_FLAT_MAX = 128
+#: sink-window radius for the synthetic mega netlists — real mapped
+#: dataflow is local; without it there are no clusters to find
+HIER_LOCALITY = 4
 
 
 def _timed_anneal(problem, score_mode: str, *, chains: int, sweeps: int,
@@ -143,6 +159,101 @@ def anneal_64x64(*, chains: int = 2, sweeps: int = 8, seed: int = 4,
     return rec
 
 
+def _hier_levels_identical(a, b) -> dict:
+    """Per-level delta-vs-full comparison of two HierPlacements."""
+    return {
+        "cluster": bool(np.array_equal(a.cluster_slots, b.cluster_slots)),
+        "detail": bool(set(a.detail_slots) == set(b.detail_slots)
+                       and all(np.array_equal(a.detail_slots[k],
+                                              b.detail_slots[k])
+                               for k in a.detail_slots)),
+        "deblock": bool((a.deblock_slots is None) == (b.deblock_slots is None)
+                        and (a.deblock_slots is None
+                             or np.array_equal(a.deblock_slots,
+                                               b.deblock_slots))),
+        "final": bool(a.coords == b.coords and a.cost == b.cost),
+    }
+
+
+def hier_sweep(sizes=HIER_SIZES, *, chains: int = 2, sweeps: int = 2,
+               seed: int = 4, repeats: int = 1,
+               flat_max: int = HIER_FLAT_MAX) -> list:
+    """Time hierarchical vs flat placement on locality-structured
+    netlists; assert per-level delta/full bit-identity at every size."""
+    records = []
+    for size in sizes:
+        spec = FabricSpec(rows=size, cols=size)
+        nl = synthetic_netlist(spec, seed=seed, locality=HIER_LOCALITY)
+
+        def hier(score_mode):
+            return place_hierarchical(nl, spec, chains=chains,
+                                      sweeps=sweeps, seed=seed + 1,
+                                      score_mode=score_mode)
+
+        # bit-identity first — these runs also compile both programs
+        hd, hf = hier("delta"), hier("full")
+        levels = _hier_levels_identical(hd, hf)
+        assert all(levels.values()), (
+            f"hierarchical score_mode divergence at {size}x{size}: "
+            f"{levels}")
+        rec = {"rows": size, "cols": size, "chains": chains,
+               "sweeps": sweeps, "cluster_grid": hd.cluster_grid,
+               "n_cells": len(nl.pe_cells) + len(nl.io_cells),
+               "n_nets": len(nl.nets),
+               "detail_dispatches": hd.detail_dispatches,
+               "hier_hpwl": hd.cost,
+               "bit_identical_levels": levels}
+        s_h = []
+        for _ in range(max(1, repeats)):
+            t0 = time.perf_counter()
+            hier("delta")
+            s_h.append(time.perf_counter() - t0)
+        rec["hier_wall_s"] = statistics.median(s_h)
+        samples = {"hier_wall_s": s_h}
+        if size <= flat_max:
+            place(nl, spec, backend="jax", chains=chains, sweeps=sweeps,
+                  seed=seed + 1, score_mode="delta")      # trace + compile
+            s_f = []
+            flat_pl = None
+            for _ in range(max(1, repeats)):
+                t0 = time.perf_counter()
+                flat_pl = place(nl, spec, backend="jax", chains=chains,
+                                sweeps=sweeps, seed=seed + 1,
+                                score_mode="delta")
+                s_f.append(time.perf_counter() - t0)
+            rec["flat_wall_s"] = statistics.median(s_f)
+            rec["flat_hpwl"] = flat_pl.cost
+            rec["speedup_vs_flat"] = rec["flat_wall_s"] / rec["hier_wall_s"]
+            samples["flat_wall_s"] = s_f
+        rec["repeats"] = repeats_block(samples, repeats)
+        rec["completed"] = True
+        records.append(rec)
+        emit(f"pnr_hier_{size}x{size}", rec["hier_wall_s"] * 1e6,
+             f"hpwl={hd.cost:.0f};grid={hd.cluster_grid};"
+             + (f"vs_flat={rec['speedup_vs_flat']:.2f}x"
+                if "speedup_vs_flat" in rec else "flat=skipped"))
+    return records
+
+
+def hier_cluster1_check(size: int = 32, *, chains: int = 2,
+                        sweeps: int = 2, seed: int = 4) -> dict:
+    """cluster_grid=1 must reproduce the flat placer bit-for-bit."""
+    spec = FabricSpec(rows=size, cols=size)
+    nl = synthetic_netlist(spec, seed=seed, locality=HIER_LOCALITY)
+    flat = place(nl, spec, backend="jax", chains=chains, sweeps=sweeps,
+                 seed=seed, score_mode="delta")
+    h1 = place_hierarchical(nl, spec, cluster_grid=1, chains=chains,
+                            sweeps=sweeps, seed=seed, score_mode="delta")
+    identical = bool(h1.coords == flat.coords and h1.cost == flat.cost
+                     and h1.chain_costs == flat.chain_costs)
+    assert identical, (
+        f"cluster_grid=1 diverged from flat at {size}x{size}: "
+        f"{h1.cost} vs {flat.cost}")
+    emit(f"pnr_hier_cluster1_{size}x{size}", 0.0,
+         f"identical={identical}")
+    return {"rows": size, "cols": size, "cluster1_identical": identical}
+
+
 def _harris_problem():
     app = image_graphs()["harris"]
     dp = baseline_datapath(app_ops(app))
@@ -212,25 +323,32 @@ def harris_bench() -> dict:
 
 
 def run(out_path: str = DEFAULT_OUT, smoke: bool = False,
-        repeats=None) -> dict:
+        repeats=None, mega: bool = False) -> dict:
     import jax
 
     if repeats is None:
         repeats = 1 if smoke else 3
     repeats = max(1, int(repeats))
-    report = {"schema": "pnr_bench/v2",
+    report = {"schema": "pnr_bench/v3",
               "host_backend": jax.default_backend(),
               "smoke": smoke,
               "manifest": manifest_block(),
               "repeats": {"n": repeats}}
     if smoke:
         # CI smoke: 8x8, 2 sweeps, both score modes — proves the delta and
-        # full programs still agree and keeps a perf datapoint per PR
+        # full programs still agree and keeps a perf datapoint per PR;
+        # plus one tiny hierarchical placement with its level-identity and
+        # cluster_grid=1 == flat gates
         report["sizes"] = scaling_sweep((8,), sweeps=2, repeats=repeats)
+        report["hier"] = hier_sweep((32,), repeats=repeats)
+        report["hier_cluster1"] = hier_cluster1_check(32)
     else:
         report["sizes"] = scaling_sweep(repeats=repeats)
         report["anneal64"] = anneal_64x64(repeats=repeats)
         report["harris"] = harris_bench()
+        sizes = HIER_SIZES + ((HIER_MEGA_SIZE,) if mega else ())
+        report["hier"] = hier_sweep(sizes, repeats=repeats)
+        report["hier_cluster1"] = hier_cluster1_check(32)
     os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
     with open(out_path, "w") as f:
         json.dump(report, f, indent=2)
@@ -243,12 +361,15 @@ def main() -> None:
     ap.add_argument("--out", default=DEFAULT_OUT)
     ap.add_argument("--smoke", action="store_true",
                     help="8x8 only, 2 sweeps, both score modes (CI step)")
+    ap.add_argument("--mega", action="store_true",
+                    help="add the 256x256 hierarchical placement "
+                         "(nightly budget)")
     ap.add_argument("--repeats", type=int, default=None, metavar="N",
                     help="timed repeats per anneal (default: 3 full, "
                          "1 smoke); the report records median + IQR")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    run(args.out, smoke=args.smoke, repeats=args.repeats)
+    run(args.out, smoke=args.smoke, repeats=args.repeats, mega=args.mega)
 
 
 if __name__ == "__main__":

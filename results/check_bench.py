@@ -203,6 +203,47 @@ def check_pnr_bench(data: Dict, path: str, errors: List[str]) -> str:
     return f"{len(sizes)} sizes bit-identical"
 
 
+HIER_LEVELS = ("cluster", "detail", "deblock", "final")
+#: hierarchical must beat flat wall-clock from this array size up; below
+#: it the two-level overhead legitimately dominates
+HIER_SPEEDUP_ROWS = 128
+
+
+def check_pnr_bench_v3(data: Dict, path: str, errors: List[str]) -> str:
+    """v2's gates plus the hierarchical section: every placement must
+    complete, delta/full must stay bit-identical at *every level*,
+    cluster_grid=1 must reproduce the flat placer, and hierarchical must
+    beat flat wall-clock at >= HIER_SPEEDUP_ROWS."""
+    base = check_pnr_bench(data, path, errors)
+    hier = data.get("hier", [])
+    if not hier:
+        errors.append(f"{path}: no hier[] entries")
+    for h in hier:
+        where = f"{path}:hier:{h.get('rows')}x{h.get('cols')}"
+        if h.get("completed") is not True:
+            errors.append(f"{where}: placement did not complete")
+        levels = h.get("bit_identical_levels")
+        if not isinstance(levels, dict):
+            errors.append(f"{where}: missing bit_identical_levels")
+        else:
+            for lvl in HIER_LEVELS:
+                if levels.get(lvl) is not True:
+                    errors.append(f"{where}: level {lvl!r} delta/full not "
+                                  f"bit-identical "
+                                  f"({levels.get(lvl)!r})")
+        if isinstance(h.get("repeats"), dict):
+            _repeat_stats(h["repeats"], where, errors)
+        else:
+            errors.append(f"{where}: missing per-size repeats block")
+        if h.get("rows", 0) >= HIER_SPEEDUP_ROWS and "flat_wall_s" in h:
+            _ratio(h, where, "speedup_vs_flat", errors)
+    c1 = data.get("hier_cluster1")
+    if not isinstance(c1, dict) or c1.get("cluster1_identical") is not True:
+        errors.append(f"{path}: hier_cluster1 check missing or false")
+    return (f"{base}; {len(hier)} hier sizes level-identical, "
+            f"cluster1 == flat")
+
+
 def check_serve(data: Dict, path: str, errors: List[str]) -> str:
     """Concurrent serving must beat serial clients, stay bit-identical
     to solo runs (the serving guarantee), and amortize dispatches: N
@@ -240,6 +281,7 @@ CHECKS = {
     "explore_pnr_batch": check_explore_pnr,
     "explore_sim_batch": check_explore_sim,
     "pnr_bench/v2": check_pnr_bench,
+    "pnr_bench/v3": check_pnr_bench_v3,
     "serve_bench/v1": check_serve,
 }
 

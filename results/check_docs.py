@@ -1,0 +1,153 @@
+#!/usr/bin/env python3
+"""Docs gate: every link, anchor, and file reference in docs/ + README
+resolves.
+
+Checks, stdlib only (CI runs this before any dependency install matters):
+
+- every relative markdown link ``[text](path)`` points at a file or
+  directory that exists in the repo;
+- every fragment link ``[text](file.md#anchor)`` points at a heading that
+  actually renders that anchor (GitHub slugging: lowercase, spaces to
+  dashes, punctuation dropped);
+- every intra-file ``[text](#anchor)`` matches a heading in the same file;
+- inline code spans that look like repo paths (``src/repro/...``,
+  ``results/...``, ``docs/...``, ``benchmarks/...``, ``tests/...``,
+  ``.github/...``, ``examples/...``) exist, so prose can't drift from the
+  tree it describes.
+
+Exit 0 when clean; exit 1 listing every failure (file:line what).
+
+Usage::
+
+    python results/check_docs.py            # checks docs/*.md + README.md
+    python results/check_docs.py FILE...    # explicit file list
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+# [text](target) — excludes images (![...]) via the lookbehind; target may
+# carry an optional #fragment and an optional "title"
+_LINK = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_HEADING = re.compile(r"^(#{1,6})\s+(.*?)\s*$")
+_CODE_FENCE = re.compile(r"^(```|~~~)")
+# inline `code` that names a repo path we can verify exists
+_PATH_SPAN = re.compile(
+    r"`((?:src|docs|results|benchmarks|tests|examples|\.github)/"
+    r"[A-Za-z0-9_./-]+)`")
+_EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def _rel(path: Path) -> str:
+    try:
+        return str(path.relative_to(REPO))
+    except ValueError:
+        return str(path)
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug for a markdown heading."""
+    # drop inline-code backticks and link syntax, keep the text
+    text = heading.replace("`", "")
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)
+    text = text.strip().lower()
+    # spaces -> dashes; drop everything that isn't word, dash, or space
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def anchors_of(path: Path) -> set:
+    """All heading anchors a markdown file renders (GitHub rules,
+    including the -1, -2 suffixes for duplicate headings)."""
+    seen: dict = {}
+    out = set()
+    in_fence = False
+    for line in path.read_text(encoding="utf-8").splitlines():
+        if _CODE_FENCE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = _HEADING.match(line)
+        if not m:
+            continue
+        slug = github_slug(m.group(2))
+        n = seen.get(slug, 0)
+        seen[slug] = n + 1
+        out.add(slug if n == 0 else f"{slug}-{n}")
+    return out
+
+
+def check_file(path: Path) -> list:
+    """All failures in one markdown file as (lineno, message) tuples."""
+    failures = []
+    in_fence = False
+    for lineno, line in enumerate(
+            path.read_text(encoding="utf-8").splitlines(), 1):
+        if _CODE_FENCE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for m in _LINK.finditer(line):
+            target = m.group(1)
+            if target.startswith(_EXTERNAL):
+                continue
+            frag = None
+            if "#" in target:
+                target, frag = target.split("#", 1)
+            if target:
+                dest = (path.parent / target).resolve()
+                if not dest.exists():
+                    failures.append((lineno, f"broken link: {m.group(1)}"))
+                    continue
+            else:
+                dest = path  # pure-fragment link into this file
+            if frag is not None:
+                if dest.is_dir() or dest.suffix.lower() != ".md":
+                    failures.append(
+                        (lineno, f"fragment on non-markdown target: "
+                                 f"{m.group(1)}"))
+                elif frag not in anchors_of(dest):
+                    failures.append(
+                        (lineno, f"missing anchor: {m.group(1)} "
+                                 f"(no heading slugs to '{frag}' in "
+                                 f"{_rel(dest)})"))
+        for m in _PATH_SPAN.finditer(line):
+            if not (REPO / m.group(1)).exists():
+                failures.append(
+                    (lineno, f"path in prose does not exist: {m.group(1)}"))
+    return failures
+
+
+def main(argv) -> int:
+    if argv:
+        files = [Path(a).resolve() for a in argv]
+    else:
+        files = sorted((REPO / "docs").glob("*.md")) + [REPO / "README.md"]
+    missing = [f for f in files if not f.exists()]
+    if missing:
+        for f in missing:
+            print(f"docs gate: no such file: {f}", file=sys.stderr)
+        return 1
+    total = 0
+    for f in files:
+        for lineno, msg in check_file(f):
+            print(f"{_rel(f)}:{lineno}: {msg}", file=sys.stderr)
+            total += 1
+    n = len(files)
+    if total:
+        print(f"docs gate FAILED: {total} broken reference(s) "
+              f"across {n} file(s)", file=sys.stderr)
+        return 1
+    print(f"docs gate passed: {n} file(s), all links/anchors/paths resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -19,7 +19,7 @@ anneals all (variant, app) placements of a bucket signature in one JAX
 dispatch.  ``python -m repro.explore --help`` drives the same pipeline
 from the command line.
 
-Robustness (see README "Robustness & resumption"): pass a
+Robustness (see docs/pipeline-reference.md): pass a
 :class:`DiskStore` as the Explorer's store for crash-safe resumption;
 with ``on_error="isolate"`` (the default) a twice-failing (variant, app)
 pair degrades to a structured :class:`StageFailure` row in

@@ -17,7 +17,7 @@ repro.obs.report``.  ``--metrics PATH`` dumps the explorer's metrics
 registry (memo hits/misses, dispatch counts, bucket histograms) as
 JSON.  Both are off by default and never change computed results.
 
-Robustness flags (see README "Robustness & resumption")::
+Robustness flags (see docs/pipeline-reference.md)::
 
     --store DIR          crash-safe on-disk memo store; a re-invocation
                          after a crash resumes from completed stages
@@ -74,7 +74,8 @@ def _config_from_args(args, mode: str) -> ExploreConfig:
                          rank_mode=args.rank_mode, fabric=fabric,
                          per_app_subgraphs=args.per_app_subgraphs,
                          domain_name=args.name, pnr_batch=args.pnr_batch,
-                         sim_batch=args.sim_batch, on_error=args.on_error)
+                         pnr_mode=args.pnr_mode, sim_batch=args.sim_batch,
+                         on_error=args.on_error)
 
 
 def _add_common(sp: argparse.ArgumentParser) -> None:
@@ -102,6 +103,12 @@ def _add_common(sp: argparse.ArgumentParser) -> None:
     sp.add_argument("--seed", type=int, default=0)
     sp.add_argument("--pnr-batch", default="grouped",
                     choices=("grouped", "serial"))
+    sp.add_argument("--pnr-mode", default="flat",
+                    choices=("flat", "hierarchical"),
+                    help="flat: single-level anneal (default); "
+                         "hierarchical: two-level cluster -> detail -> "
+                         "deblock placement for large arrays "
+                         "(docs/placement.md)")
     sp.add_argument("--sim-batch", default="grouped",
                     choices=("grouped", "serial"),
                     help="batch-first schedule/simulate stages (grouped) "

@@ -27,10 +27,12 @@ from ..fabric.options import FabricOptions
 #: versions so stale blobs fail loudly instead of silently defaulting
 #: (2: added sim_batch — batch-first schedule/simulate stages)
 #: (3: added on_error — per-pair fault isolation policy)
-CONFIG_SCHEMA = 3
+#: (4: added pnr_mode — flat vs hierarchical placement)
+CONFIG_SCHEMA = 4
 
 MODES = ("per_app", "domain")
 PNR_BATCH_MODES = ("grouped", "serial")
+PNR_MODES = ("flat", "hierarchical")
 SIM_BATCH_MODES = ("grouped", "serial")
 ON_ERROR_MODES = ("isolate", "raise")
 
@@ -61,6 +63,15 @@ class ExploreConfig:
                         (:func:`repro.fabric.place.anneal_jax_batch`);
                         "serial": one dispatch per pair (the legacy loop —
                         bit-identical to the pre-``repro.explore`` driver).
+    pnr_mode          — "flat": single-level anneal over the whole array
+                        (the default; bit-identical to every build before
+                        this field existed); "hierarchical": two-level
+                        cluster -> detail -> deblock flow
+                        (:func:`repro.fabric.place.place_hierarchical`)
+                        for mega-fabrics.  Hierarchical pairs run on the
+                        serial dispatch path (each placement is already
+                        internally batched across its clusters), so
+                        ``pnr_batch="grouped"`` is ignored for them.
     sim_batch         — "grouped": modulo scheduling runs its slot-conflict
                         scans in lockstep across pairs sharing a fabric
                         signature, and all simulations of one bucket
@@ -89,10 +100,14 @@ class ExploreConfig:
     domain_name: str = "PE_DOM"
     fabric: Optional[FabricOptions] = None
     pnr_batch: str = "grouped"
+    pnr_mode: str = "flat"
     sim_batch: str = "grouped"
     on_error: str = "isolate"
 
     def __post_init__(self) -> None:
+        if self.pnr_mode not in PNR_MODES:
+            raise ValueError(f"pnr_mode must be one of {PNR_MODES}, "
+                             f"got {self.pnr_mode!r}")
         if self.on_error not in ON_ERROR_MODES:
             raise ValueError(f"on_error must be one of {ON_ERROR_MODES}, "
                              f"got {self.on_error!r}")
@@ -146,8 +161,8 @@ class ExploreConfig:
         for name, want in (("mode", str), ("max_merge", int),
                            ("rank_mode", str), ("validate", bool),
                            ("per_app_subgraphs", int), ("domain_name", str),
-                           ("pnr_batch", str), ("sim_batch", str),
-                           ("on_error", str)):
+                           ("pnr_batch", str), ("pnr_mode", str),
+                           ("sim_batch", str), ("on_error", str)):
             if name in d and (not isinstance(d[name], want)
                               or (want is int and isinstance(d[name], bool))):
                 raise ConfigFormatError(

@@ -95,14 +95,20 @@ def _mining_fields(cfg: ExploreConfig) -> Tuple:
             m.allow_macros)
 
 
-def _pnr_fields(options: "FabricOptions", pnr_batch: str) -> Tuple:
+def _pnr_fields(options: "FabricOptions", pnr_batch: str,
+                pnr_mode: str = "flat") -> Tuple:
     s = options.spec
     spec_sig = None if s is None else (s.rows, s.cols, s.channel_width,
                                        s.io_capacity, s.hop_energy_pj,
                                        s.hop_delay_ns, s.latch_depth)
-    return (spec_sig, options.backend, options.hpwl_backend,
-            options.score_mode, options.chains, options.sweeps,
-            options.seed, pnr_batch, options.anneal_max_states)
+    sig = (spec_sig, options.backend, options.hpwl_backend,
+           options.score_mode, options.chains, options.sweeps,
+           options.seed, pnr_batch, options.anneal_max_states)
+    # flat keys keep their pre-pnr_mode shape so existing memo stores
+    # stay warm across the upgrade; hierarchical results key separately
+    if pnr_mode != "flat":
+        sig = sig + (pnr_mode,)
+    return sig
 
 
 def _sched_fields(options: "FabricOptions") -> Tuple:
@@ -123,7 +129,8 @@ def _pair_nonce(pe_name: str, app_name: str) -> int:
 # ---------------------------------------------------------------------------
 # per-pair primitives (shared by the Explorer stages and the legacy shims)
 # ---------------------------------------------------------------------------
-def _pnr_pair(pe_name, dp, mapping, app, options) -> "PnRResult":
+def _pnr_pair(pe_name, dp, mapping, app, options,
+              pnr_mode: str = "flat") -> "PnRResult":
     from ..fabric import place_and_route
     return place_and_route(dp, mapping, app, options.spec,
                            backend=options.backend, chains=options.chains,
@@ -131,7 +138,8 @@ def _pnr_pair(pe_name, dp, mapping, app, options) -> "PnRResult":
                            pe_name=pe_name,
                            hpwl_backend=options.hpwl_backend,
                            score_mode=options.score_mode,
-                           max_states=options.anneal_max_states)
+                           max_states=options.anneal_max_states,
+                           pnr_mode=pnr_mode)
 
 
 def pnr_grouped(items: List[Tuple[str, Any, Mapping, Graph, int]],
@@ -645,15 +653,17 @@ class Explorer:
 
         Gathers every pair missing from the memo, lowers all netlists,
         groups them by bucket signature, and anneals each group's chains
-        in one JAX dispatch (``pnr_batch="grouped"``).  Non-"jax" backends
-        and ``pnr_batch="serial"`` fall back to the per-pair loop.
+        in one JAX dispatch (``pnr_batch="grouped"``).  Non-"jax" backends,
+        ``pnr_batch="serial"`` and ``pnr_mode="hierarchical"`` fall back
+        to the per-pair loop (a hierarchical placement is itself a batched
+        dispatch across its clusters, so cross-pair grouping buys nothing).
         """
         cfg = self.config
         options = cfg.fabric
         if options is None:
             raise ValueError("pnr stage requires config.fabric")
         mappings = self.map()
-        sig = _pnr_fields(options, cfg.pnr_batch)
+        sig = _pnr_fields(options, cfg.pnr_batch, cfg.pnr_mode)
 
         keys: Dict[Pair, Tuple] = {}
         misses = []
@@ -671,7 +681,8 @@ class Explorer:
                 self.metrics.inc("memo.hit.pnr")
 
         grouped = (cfg.pnr_batch == "grouped" and options.backend == "jax"
-                   and options.hpwl_backend == "jnp")
+                   and options.hpwl_backend == "jnp"
+                   and cfg.pnr_mode == "flat")
         with span("pnr", pairs=len(keys), misses=len(misses)), \
                 stage_memory(self.metrics, "pnr"):
             if misses and grouped:
@@ -687,7 +698,7 @@ class Explorer:
                         pnr = self._retry(
                             "pnr", lambda v=v, a=a: _pnr_pair(
                                 v.name, v.datapath, mappings[(v.name, a)],
-                                self.apps[a], options),
+                                self.apps[a], options, cfg.pnr_mode),
                             pe=v.name, app=a)
                         if pnr is _FAILED:
                             self._failed.add(key)
@@ -701,7 +712,7 @@ class Explorer:
                         pnr = self._attempt(
                             "pnr", lambda v=v, a=a: _pnr_pair(
                                 v.name, v.datapath, mappings[(v.name, a)],
-                                self.apps[a], options),
+                                self.apps[a], options, cfg.pnr_mode),
                             pe=v.name, app=a)
                     if pnr is _FAILED:
                         self._failed.add(key)
@@ -728,7 +739,7 @@ class Explorer:
             raise ValueError("schedule stage requires config.fabric")
         mappings = self.map()
         pnrs = self.pnr()
-        sig = _pnr_fields(options, cfg.pnr_batch)
+        sig = _pnr_fields(options, cfg.pnr_batch, cfg.pnr_mode)
 
         def serial_sched(v, a):
             return build_sim(v.datapath, mappings[(v.name, a)],
@@ -814,7 +825,8 @@ class Explorer:
             pair = (v.name, app_name)
             if pair not in progs:                    # failed upstream
                 continue
-            key = ("sim", map_key[1:], _pnr_fields(options, cfg.pnr_batch),
+            key = ("sim", map_key[1:],
+                   _pnr_fields(options, cfg.pnr_batch, cfg.pnr_mode),
                    _sim_fields(options), cfg.sim_batch,
                    _sched_fields(options))
             if key in self._failed:          # degraded earlier this run

@@ -23,18 +23,20 @@ from ..core.pe import Datapath
 from ..graphir.graph import Graph
 from .arch import FabricSpec, manhattan
 from .cost import FabricCost, attach_fabric, evaluate_fabric
+from .cluster import Clustering, partition
 from .netlist import Cell, Net, Netlist, extract_netlist, synthetic_netlist
 from .options import FabricOptions
-from .place import Placement, PlacementProblem, anneal_jax, \
+from .place import HierPlacement, Placement, PlacementProblem, anneal_jax, \
     anneal_jax_batch, anneal_python, batch_signature, lower, net_incidence, \
-    place
+    place, place_hierarchical
 from .route import RouteResult, RoutedNet, route_nets
 
 __all__ = [
     "FabricSpec", "FabricOptions", "manhattan", "Cell", "Net", "Netlist",
     "extract_netlist", "synthetic_netlist", "Placement", "PlacementProblem",
-    "lower", "net_incidence", "place", "anneal_jax", "anneal_jax_batch",
-    "anneal_python", "batch_signature",
+    "HierPlacement", "Clustering", "partition",
+    "lower", "net_incidence", "place", "place_hierarchical", "anneal_jax",
+    "anneal_jax_batch", "anneal_python", "batch_signature",
     "RouteResult", "RoutedNet", "route_nets",
     "FabricCost", "evaluate_fabric", "attach_fabric", "PnRResult",
     "place_and_route",
@@ -57,15 +59,35 @@ def place_and_route(dp: Datapath, mapping: Mapping, app: Graph,
                     auto_size: bool = True, pe_name: str = "PE",
                     hpwl_backend: str = "jnp",
                     score_mode: str = "delta",
-                    max_states: Optional[int] = None) -> PnRResult:
-    """Full flow: netlist -> place -> route -> array-level cost."""
+                    max_states: Optional[int] = None,
+                    pnr_mode: str = "flat") -> PnRResult:
+    """Full flow: netlist -> place -> route -> array-level cost.
+
+    ``pnr_mode="hierarchical"`` runs :func:`place_hierarchical` (cluster ->
+    detail -> deblock) instead of the flat single-level anneal — worth it
+    for mega-fabrics, pure overhead for the small arrays single mapped
+    apps produce.  The default stays the flat path, bit-identical to what
+    this function returned before ``pnr_mode`` existed.
+    """
     spec = spec or FabricSpec()
     netlist = extract_netlist(mapping, app, spec)
     if auto_size:
         spec = spec.fit(len(netlist.pe_cells), len(netlist.io_cells))
-    placement = place(netlist, spec, backend=backend, chains=chains,
-                      sweeps=sweeps, seed=seed, hpwl_backend=hpwl_backend,
-                      score_mode=score_mode, max_states=max_states)
+    if pnr_mode == "hierarchical":
+        if backend != "jax" or hpwl_backend != "jnp":
+            raise ValueError("pnr_mode='hierarchical' requires the jax "
+                             "backend with hpwl_backend='jnp'")
+        placement = place_hierarchical(netlist, spec, chains=chains,
+                                       sweeps=sweeps, seed=seed,
+                                       score_mode=score_mode,
+                                       max_states=max_states)
+    elif pnr_mode == "flat":
+        placement = place(netlist, spec, backend=backend, chains=chains,
+                          sweeps=sweeps, seed=seed,
+                          hpwl_backend=hpwl_backend,
+                          score_mode=score_mode, max_states=max_states)
+    else:
+        raise ValueError(f"unknown pnr_mode {pnr_mode!r}")
     routes = route_nets(netlist, placement, spec)
     fc = evaluate_fabric(dp, mapping, netlist, placement, routes, spec,
                          pe_name=pe_name)

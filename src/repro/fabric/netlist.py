@@ -69,7 +69,8 @@ class Netlist:
 
 def synthetic_netlist(spec: FabricSpec, *, fill: float = 0.85,
                       seed: int = 0, max_fanout: int = 3,
-                      io_frac: float = 0.25) -> Netlist:
+                      io_frac: float = 0.25,
+                      locality: Optional[int] = None) -> Netlist:
     """Random netlist sized to a fabric — the placer-scaling workload.
 
     Fills ``fill`` of the PE tiles with cells; each PE drives one net to
@@ -78,6 +79,15 @@ def synthetic_netlist(spec: FabricSpec, *, fill: float = 0.85,
     input streams (each feeding a few PEs) and output taps (extra sinks on
     existing PE nets).  Deterministic in ``seed``; no application needed,
     so it scales to any ``rows x cols``.
+
+    ``locality`` (a window radius in tiles) biases each PE's sinks to
+    cells whose *home tile* — cell ``i`` homes at ``(i % cols,
+    i // cols)`` — lies within a Chebyshev window of the driver's.  Real
+    mapped dataflow graphs are local (producers feed nearby consumers),
+    and the hierarchical placer's clustering only pays off on such
+    structure; uniformly random netlists have no clusters to find.  The
+    default (``None``) keeps the original fully random draw, bit-identical
+    to what this function produced before ``locality`` existed.
     """
     import numpy as np
 
@@ -98,9 +108,21 @@ def synthetic_netlist(spec: FabricSpec, *, fill: float = 0.85,
     sinks_of: Dict[int, Set[str]] = {}
     for i in range(n_pe):
         k = int(rng.integers(1, max_fanout + 1))
-        # draw one spare so dropping the driver still leaves k sinks
-        cand = rng.choice(n_pe, size=min(k + 1, n_pe), replace=False)
-        sinks = [f"pe{c}" for c in cand if c != i][:k]
+        if locality:
+            hx, hy = i % spec.cols, i // spec.cols
+            ys = np.arange(max(0, hy - locality),
+                           min(spec.rows, hy + locality + 1))
+            xs = np.arange(max(0, hx - locality),
+                           min(spec.cols, hx + locality + 1))
+            window = (ys[:, None] * spec.cols + xs[None, :]).ravel()
+            window = window[(window < n_pe) & (window != i)]
+            cand = rng.choice(window, size=min(k, len(window)),
+                              replace=False)
+            sinks = [f"pe{c}" for c in cand]
+        else:
+            # draw one spare so dropping the driver still leaves k sinks
+            cand = rng.choice(n_pe, size=min(k + 1, n_pe), replace=False)
+            sinks = [f"pe{c}" for c in cand if c != i][:k]
         sinks_of[i] = set(sinks) or {f"pe{(i + 1) % n_pe}"}
     for j in range(n_out):                 # output taps on random PE nets
         sinks_of[int(rng.integers(0, n_pe))].add(f"out{j}")

@@ -26,6 +26,21 @@ those ≤2K nets instead of all N:
   (select on the two swapped entity ids) before reducing the per-net
   bounding boxes, emitting new per-net costs plus the move delta.
 
+Fixed-terminal ("mixed") variants — the hierarchical placer's detailed
+level anneals each cluster in its own local coordinate frame, with pins
+outside the cluster frozen at their estimated positions.  Rather than
+materializing those terminals as entities, each net carries a precomputed
+*fixed bounding box* (``net_fix``: xmin/xmax/ymin/ymax over its external
+pins, rebased into the cluster frame) that is folded into the per-net
+reduction:
+
+* :func:`net_hpwl_fixed` / :func:`hpwl_fixed` — full recompute with the
+  fixed boxes folded in;
+* :func:`hpwl_delta_fixed` — the incremental counterpart of
+  :func:`hpwl_delta`;
+* :data:`EMPTY_BOX` — the "no external pins" sentinel (min > max, so the
+  box never widens a bound and a box-only net scores 0).
+
 A pure-NumPy oracle (:func:`hpwl_reference`) anchors the tests.
 """
 
@@ -227,3 +242,77 @@ def hpwl_delta_pallas(slot_xy: jax.Array, slot_of: jax.Array,
         interpret=interpret,
     )(x, y, p, m, old_p, ab, sw)
     return new_p[:t, 0], delta[0, 0]
+
+
+# ---------------------------------------------------------------------------
+# Fixed-terminal variants: per-net fixed bounding boxes folded into the
+# reduction (cluster-local frames for the hierarchical placer).
+# ---------------------------------------------------------------------------
+
+#: per-net "no external pins" box: [xmin, xmax, ymin, ymax] with min > max,
+#: the identity of the fold below — jnp.minimum(x, _BIG) == x and
+#: jnp.maximum(x, -_BIG) == x exactly, so a sentinel box is a bit-exact
+#: no-op and fixed-box programs agree with the plain ones on box-free nets
+EMPTY_BOX = (_BIG, -_BIG, _BIG, -_BIG)
+
+
+def fixed_box(points) -> np.ndarray:
+    """[xmin, xmax, ymin, ymax] float32 over (x, y) pairs; EMPTY_BOX when
+    there are none.  Host-side helper for lowering cluster-local nets."""
+    pts = np.asarray(list(points), np.float32)
+    if pts.size == 0:
+        return np.asarray(EMPTY_BOX, np.float32)
+    return np.asarray([pts[:, 0].min(), pts[:, 0].max(),
+                       pts[:, 1].min(), pts[:, 1].max()], np.float32)
+
+
+def net_hpwl_fixed_from_xy(xy: jax.Array, net_mask: jax.Array,
+                           net_fix: jax.Array) -> jax.Array:
+    """Per-net HPWL with per-net fixed boxes folded in.
+    xy: (N, D, 2); net_mask: (N, D) bool; net_fix: (N, 4).  Returns (N,).
+    A net is scored when it has movable pins or a non-empty box."""
+    x, y = xy[..., 0], xy[..., 1]
+    xmin = jnp.minimum(jnp.min(jnp.where(net_mask, x, _BIG), axis=-1),
+                       net_fix[..., 0])
+    xmax = jnp.maximum(jnp.max(jnp.where(net_mask, x, -_BIG), axis=-1),
+                       net_fix[..., 1])
+    ymin = jnp.minimum(jnp.min(jnp.where(net_mask, y, _BIG), axis=-1),
+                       net_fix[..., 2])
+    ymax = jnp.maximum(jnp.max(jnp.where(net_mask, y, -_BIG), axis=-1),
+                       net_fix[..., 3])
+    valid = (jnp.any(net_mask, axis=-1)
+             | (net_fix[..., 0] <= net_fix[..., 1]))
+    return jnp.where(valid, (xmax - xmin) + (ymax - ymin), 0.0)
+
+
+def net_hpwl_fixed(pos: jax.Array, net_pins: jax.Array, net_mask: jax.Array,
+                   net_fix: jax.Array) -> jax.Array:
+    """Per-net HPWL under fixed boxes.  Same contract as :func:`net_hpwl`
+    plus ``net_fix`` (N, 4)."""
+    return net_hpwl_fixed_from_xy(pos[net_pins], net_mask, net_fix)
+
+
+@jax.jit
+def hpwl_fixed(pos: jax.Array, net_pins: jax.Array, net_mask: jax.Array,
+               net_fix: jax.Array) -> jax.Array:
+    """Total HPWL of one placement with fixed terminals (scalar)."""
+    return jnp.sum(net_hpwl_fixed(pos, net_pins, net_mask, net_fix))
+
+
+def hpwl_delta_fixed(slot_xy: jax.Array, cand_slot_of: jax.Array,
+                     net_pins: jax.Array, net_mask: jax.Array,
+                     per_net_cost: jax.Array, touched: jax.Array,
+                     net_fix: jax.Array):
+    """Rescore the ``touched`` nets under fixed boxes — the incremental
+    counterpart of :func:`hpwl_delta`, same contract plus ``net_fix``."""
+    pins, mask, old = _touched_view(net_pins, net_mask, per_net_cost,
+                                    touched)
+    n = net_pins.shape[0]
+    tc = jnp.minimum(touched, n - 1)
+    # pad/duplicate rows are fully masked with old=0; their clamped gather
+    # would still pull net n-1's real box, so force those boxes empty too
+    fix = jnp.where((touched < n)[:, None], net_fix[tc],
+                    jnp.asarray(EMPTY_BOX, net_fix.dtype))
+    xy = slot_xy[cand_slot_of[pins]]                  # (T, D, 2)
+    new_vals = net_hpwl_fixed_from_xy(xy, mask, fix)
+    return new_vals, jnp.sum(new_vals - old)

@@ -95,6 +95,30 @@ def _flatten_pnr(doc: Dict[str, Any]) -> Dict[str, Tuple[float, str]]:
     return out
 
 
+def _flatten_pnr_v3(doc: Dict[str, Any]) -> Dict[str, Tuple[float, str]]:
+    """v2's metrics plus the hierarchical section (hier.<tag>.*)."""
+    out = _flatten_pnr(doc)
+    for h in doc.get("hier", []):
+        tag = f"hier.{h.get('rows')}x{h.get('cols')}"
+        for k in ("hier_wall_s", "flat_wall_s"):
+            if isinstance(h.get(k), (int, float)):
+                out[f"{tag}.{k}"] = (float(h[k]), "time")
+        if isinstance(h.get("speedup_vs_flat"), (int, float)):
+            out[f"{tag}.speedup_vs_flat"] = (
+                float(h["speedup_vs_flat"]), "ratio")
+        levels = h.get("bit_identical_levels")
+        ok = (isinstance(levels, dict) and levels
+              and all(v is True for v in levels.values()))
+        out[f"{tag}.levels_identical"] = (1.0 if ok else 0.0, "flag")
+        out[f"{tag}.completed"] = (
+            1.0 if h.get("completed") is True else 0.0, "flag")
+    c1 = doc.get("hier_cluster1")
+    if c1 is not None:
+        out["hier.cluster1_identical"] = (
+            1.0 if c1.get("cluster1_identical") is True else 0.0, "flag")
+    return out
+
+
 #: benchmark id -> flattener returning {metric: (value, kind)} with kind
 #: in {"time", "ratio", "count", "flag", "info"}
 _FLATTENERS = {
@@ -107,6 +131,7 @@ _FLATTENERS = {
          "grouped_sched_groups"),
         ("bit_identical", "ii_identical", "verified")),
     "pnr_bench/v2": _flatten_pnr,
+    "pnr_bench/v3": _flatten_pnr_v3,
     "serve_bench/v1": lambda d: _flatten_explore(
         d, ("serial_s", "batched_s", "cache_hit_ms"),
         ("serial_dispatches", "batched_dispatches", "single_dispatches",
@@ -139,10 +164,16 @@ def _fresh_iqr(doc: Dict[str, Any], metric: str) -> float:
     rep = doc.get("repeats")
     if not isinstance(rep, dict):
         return 0.0
-    # explore benches: repeats[metric]; pnr bench: sizes carry their own
-    # repeats blocks, flattened metric names are "<tag>.<key>"
+    # explore benches: repeats[metric]; pnr bench: sizes/hier entries carry
+    # their own repeats blocks, flattened metric names are "<tag>.<key>"
+    # (hier entries flatten as "hier.<tag>.<key>")
     entry = rep.get(metric)
-    if entry is None and "." in metric:
+    if entry is None and metric.startswith("hier."):
+        tag, key = metric[len("hier."):].split(".", 1)
+        for h in doc.get("hier", []):
+            if f"{h.get('rows')}x{h.get('cols')}" == tag:
+                entry = (h.get("repeats") or {}).get(key)
+    elif entry is None and "." in metric:
         tag, key = metric.split(".", 1)
         for s in doc.get("sizes", []):
             if f"{s.get('rows')}x{s.get('cols')}" == tag:

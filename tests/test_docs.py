@@ -1,0 +1,142 @@
+"""Docs stay true: the link/anchor gate passes, and the CLI flag surface
+and the documentation never drift apart.
+
+The drift test is two-directional: every flag argparse defines must be
+documented in docs/pipeline-reference.md, and every ``--flag`` the docs
+mention in a CLI section must actually exist in that CLI.  This is the
+regression test for the class of bug where a flag is added (or renamed)
+and the reference keeps describing the old world.
+"""
+
+import importlib.util
+import re
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+DOCS = REPO / "docs"
+REFERENCE = DOCS / "pipeline-reference.md"
+
+_ADD_ARG = re.compile(r"add_argument\(\s*\"(--[\w-]+)\"")
+_FLAG = re.compile(r"(--[a-z][\w-]*)")
+
+
+def _source_flags(module_path: Path) -> set:
+    """Every long option argparse defines in one CLI module."""
+    flags = set(_ADD_ARG.findall(module_path.read_text(encoding="utf-8")))
+    assert flags, f"no add_argument calls found in {module_path}"
+    return flags
+
+
+def _doc_sections(path: Path) -> dict:
+    """Markdown split into {heading: body} on ## headings."""
+    sections = {}
+    current, lines = "_preamble", []
+    for line in path.read_text(encoding="utf-8").splitlines():
+        if line.startswith("## "):
+            sections[current] = "\n".join(lines)
+            current, lines = line[3:].strip(), []
+        else:
+            lines.append(line)
+    sections[current] = "\n".join(lines)
+    return sections
+
+
+def _cli_section(sections: dict, needle: str) -> str:
+    hits = [body for title, body in sections.items() if needle in title]
+    assert hits, f"no section titled with {needle!r} in {REFERENCE}"
+    return "\n".join(hits)
+
+
+def test_docs_link_gate():
+    """python results/check_docs.py passes (same gate CI runs)."""
+    spec = importlib.util.spec_from_file_location(
+        "check_docs", REPO / "results" / "check_docs.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    assert mod.main([]) == 0
+
+
+def test_docs_exist():
+    for name in ("architecture.md", "pipeline-reference.md",
+                 "placement.md", "observability.md"):
+        assert (DOCS / name).is_file(), f"missing docs/{name}"
+
+
+def test_explore_flags_all_documented():
+    flags = _source_flags(REPO / "src" / "repro" / "explore" / "__main__.py")
+    doc = REFERENCE.read_text(encoding="utf-8")
+    undocumented = {f for f in flags if f not in doc}
+    assert not undocumented, (
+        f"explore CLI flags missing from docs/pipeline-reference.md: "
+        f"{sorted(undocumented)}")
+
+
+def test_serve_flags_all_documented():
+    flags = _source_flags(REPO / "src" / "repro" / "serve" / "__main__.py")
+    doc = REFERENCE.read_text(encoding="utf-8")
+    undocumented = {f for f in flags if f not in doc}
+    assert not undocumented, (
+        f"serve CLI flags missing from docs/pipeline-reference.md: "
+        f"{sorted(undocumented)}")
+
+
+def test_documented_explore_flags_exist():
+    """Every --flag named in the explore CLI section is a real flag."""
+    flags = _source_flags(REPO / "src" / "repro" / "explore" / "__main__.py")
+    section = _cli_section(_doc_sections(REFERENCE), "repro.explore")
+    phantom = set(_FLAG.findall(section)) - flags
+    assert not phantom, (
+        f"docs/pipeline-reference.md documents explore flags that don't "
+        f"exist: {sorted(phantom)}")
+
+
+def test_documented_serve_flags_exist():
+    flags = _source_flags(REPO / "src" / "repro" / "serve" / "__main__.py")
+    section = _cli_section(_doc_sections(REFERENCE), "repro.serve")
+    phantom = set(_FLAG.findall(section)) - flags
+    assert not phantom, (
+        f"docs/pipeline-reference.md documents serve flags that don't "
+        f"exist: {sorted(phantom)}")
+
+
+def test_readme_flags_exist():
+    """--flags mentioned anywhere in the README exist in some CLI."""
+    explore = _source_flags(
+        REPO / "src" / "repro" / "explore" / "__main__.py")
+    serve = _source_flags(REPO / "src" / "repro" / "serve" / "__main__.py")
+    known = explore | serve
+    text = (REPO / "README.md").read_text(encoding="utf-8")
+    # link targets (anchor slugs like #cli-python--m-reproserve) are not
+    # flag mentions
+    text = re.sub(r"(?<=\])\([^)]*\)", "", text)
+    # only prose/backtick mentions; strip fenced code blocks of pytest etc.
+    phantom = {f for f in _FLAG.findall(text)
+               if f not in known and f not in ("--smoke",)} - {
+        # pytest/pip options shown in the quick start are not our CLIs
+        "--upgrade"}
+    phantom = {f for f in phantom if f not in ("-m",)}
+    assert not phantom, f"README mentions unknown flags: {sorted(phantom)}"
+
+
+def test_config_fields_all_documented():
+    """Every ExploreConfig / FabricOptions field appears in the
+    reference's tables."""
+    from dataclasses import fields
+
+    from repro.explore import ExploreConfig
+    from repro.fabric import FabricOptions
+
+    doc = REFERENCE.read_text(encoding="utf-8")
+    missing = [f.name for cls in (ExploreConfig, FabricOptions)
+               for f in fields(cls) if f"`{f.name}`" not in doc]
+    assert not missing, (
+        f"config fields missing from docs/pipeline-reference.md: {missing}")
+
+
+def test_epilog_references_docs_not_readme_sections():
+    """The CLI epilog must not point at README sections that moved."""
+    src = (REPO / "src" / "repro" / "explore" /
+           "__main__.py").read_text(encoding="utf-8")
+    assert 'README "' not in src, (
+        "explore CLI epilog references a README section; point it at "
+        "docs/ instead")

@@ -1,0 +1,174 @@
+"""Hierarchical placement invariants (ISSUE 10).
+
+Deterministic seeded tests always run; the same invariants are also
+property-tested under Hypothesis when it is installed (same gating idiom
+as tests/test_property.py).
+
+Invariants:
+
+- partition(): every PE cell lands in exactly one cluster, no cluster
+  exceeds its capacity, and the clustering is deterministic;
+- place_hierarchical(cluster_grid=1) is bit-identical to the flat
+  place() at equal seeds (the degenerate hierarchy IS the flat placer);
+- delta and full score modes are bit-identical at every hierarchical
+  level (cluster / detail / deblock / final);
+- the fixed-box HPWL kernels agree with a numpy reference, and the
+  EMPTY_BOX sentinel is a bit-exact no-op.
+"""
+
+import numpy as np
+import pytest
+
+from repro.fabric import FabricSpec, partition, place, place_hierarchical
+from repro.fabric.netlist import synthetic_netlist
+
+
+def _spec(rows, cols):
+    return FabricSpec(rows=rows, cols=cols)
+
+
+# ---------------------------------------------------------------------------
+# partition invariants (deterministic sweep)
+
+def _check_partition(netlist, n_clusters, cap):
+    cl = partition(netlist, n_clusters, cap)
+    names = sorted(c.name for c in netlist.pe_cells)
+    # exactly-one-cluster: the flattened clusters are a permutation of
+    # the PE cells, and the inverse map agrees
+    flat = sorted(n for grp in cl.clusters for n in grp)
+    assert flat == names
+    assert sorted(cl.cluster_of) == names
+    for k, grp in enumerate(cl.clusters):
+        assert len(grp) <= cap, f"cluster {k} over cap: {len(grp)} > {cap}"
+        for n in grp:
+            assert cl.cluster_of[n] == k
+    assert cl.cut_nets >= 0 and cl.internal_nets >= 0
+    return cl
+
+
+@pytest.mark.parametrize("rows,cols,g,seed", [
+    (8, 8, 2, 0), (8, 8, 2, 3), (12, 12, 3, 1), (16, 16, 4, 2),
+])
+def test_partition_invariants(rows, cols, g, seed):
+    spec = _spec(rows, cols)
+    net = synthetic_netlist(spec, seed=seed, locality=3)
+    cap = (rows // g) * (cols // g)
+    _check_partition(net, g * g, cap)
+
+
+def test_partition_deterministic():
+    spec = _spec(8, 8)
+    net = synthetic_netlist(spec, seed=7, locality=2)
+    a = partition(net, 4, 16)
+    b = partition(net, 4, 16)
+    assert a.clusters == b.clusters and a.cluster_of == b.cluster_of
+    assert (a.cut_nets, a.internal_nets) == (b.cut_nets, b.internal_nets)
+
+
+def test_partition_rejects_overfull():
+    spec = _spec(8, 8)
+    net = synthetic_netlist(spec, seed=0)
+    n = len(net.pe_cells)
+    with pytest.raises(ValueError):
+        partition(net, 2, (n // 2) - 1)
+
+
+# ---------------------------------------------------------------------------
+# cluster_grid=1 == flat, bit for bit
+
+def test_cluster1_bit_identical_to_flat():
+    spec = _spec(8, 8)
+    net = synthetic_netlist(spec, seed=5, locality=2)
+    kw = dict(chains=2, sweeps=4, seed=11)
+    flat = place(net, spec, backend="jax", **kw)
+    hier = place_hierarchical(net, spec, cluster_grid=1, **kw)
+    assert hier.cluster_grid == 1
+    assert hier.coords == flat.coords
+    assert hier.cost == flat.cost
+    np.testing.assert_array_equal(np.asarray(hier.chain_costs),
+                                  np.asarray(flat.chain_costs))
+
+
+# ---------------------------------------------------------------------------
+# delta == full at every level
+
+def test_hier_levels_delta_vs_full_bit_identical():
+    spec = _spec(8, 8)
+    net = synthetic_netlist(spec, seed=9, locality=2)
+    kw = dict(cluster_grid=2, chains=2, sweeps=4, seed=3)
+    d = place_hierarchical(net, spec, score_mode="delta", **kw)
+    f = place_hierarchical(net, spec, score_mode="full", **kw)
+    assert d.level_costs == f.level_costs
+    assert d.coords == f.coords
+    assert d.cost == f.cost
+    # legality: every cell on a distinct legal tile
+    seen = set()
+    for name, (x, y) in d.coords.items():
+        assert (x, y) not in seen
+        seen.add((x, y))
+
+
+# ---------------------------------------------------------------------------
+# fixed-box HPWL kernels vs a numpy reference
+
+def _ref_hpwl_fixed(slot_xy, net_pins, net_mask, net_fix):
+    total = 0.0
+    for pins, mask, (fx0, fx1, fy0, fy1) in zip(net_pins, net_mask, net_fix):
+        xs = [slot_xy[p][0] for p, m in zip(pins, mask) if m]
+        ys = [slot_xy[p][1] for p, m in zip(pins, mask) if m]
+        if not xs:
+            continue
+        xmin, xmax = min(xs + [fx0]), max(xs + [fx1])
+        ymin, ymax = min(ys + [fy0]), max(ys + [fy1])
+        total += (xmax - xmin) + (ymax - ymin)
+    return total
+
+
+def test_hpwl_fixed_matches_reference():
+    from repro.kernels.pnr_cost import EMPTY_BOX, fixed_box, hpwl_fixed
+
+    rng = np.random.default_rng(0)
+    n_slots, n_nets, k = 12, 6, 4
+    slot_xy = rng.integers(0, 8, size=(n_slots, 2)).astype(np.float32)
+    net_pins = rng.integers(0, n_slots, size=(n_nets, k)).astype(np.int32)
+    net_mask = (rng.random((n_nets, k)) < 0.8).astype(np.float32)
+    net_fix = np.stack(
+        [fixed_box(rng.integers(0, 8, size=(3, 2)).astype(np.float32))
+         for _ in range(n_nets // 2)]
+        + [np.asarray(EMPTY_BOX, np.float32)] * (n_nets - n_nets // 2)
+    ).astype(np.float32)
+    got = float(hpwl_fixed(slot_xy, net_pins, net_mask, net_fix))
+    want = _ref_hpwl_fixed(slot_xy, net_pins, net_mask, net_fix)
+    assert got == pytest.approx(want)
+
+
+def test_empty_box_is_noop():
+    from repro.kernels.pnr_cost import EMPTY_BOX, hpwl, hpwl_fixed
+
+    rng = np.random.default_rng(1)
+    slot_xy = rng.integers(0, 6, size=(10, 2)).astype(np.float32)
+    net_pins = rng.integers(0, 10, size=(5, 3)).astype(np.int32)
+    net_mask = np.ones((5, 3), np.float32)
+    empties = np.tile(np.asarray(EMPTY_BOX, np.float32), (5, 1))
+    assert float(hpwl_fixed(slot_xy, net_pins, net_mask, empties)) == \
+        float(hpwl(slot_xy, net_pins, net_mask))
+
+
+# ---------------------------------------------------------------------------
+# the same partition invariants, property-tested when hypothesis exists
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HYP = True
+except ImportError:                                  # pragma: no cover
+    _HYP = False
+
+if _HYP:
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**16), g=st.sampled_from([1, 2, 4]),
+           locality=st.sampled_from([None, 2, 4]))
+    def test_partition_property(seed, g, locality):
+        spec = _spec(8, 8)
+        net = synthetic_netlist(spec, seed=seed, locality=locality)
+        cap = (8 // g) * (8 // g)
+        _check_partition(net, g * g, cap)
